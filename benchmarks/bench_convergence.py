@@ -1,0 +1,53 @@
+"""Paper Fig. 4 + Fig. 6: training performance (AUC of ROC) versus wall time
+for HSGD and the four baselines, on all three (synthetic) datasets, under the
+paper's WAN link model; Fig. 6's compute-time scaling (0.1x / 10x) included.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    comm_bytes_at_step,
+    csv_row,
+    eval_model,
+    run_algorithm,
+    setup_experiment,
+    sizes_for,
+)
+from repro.core import comm_model as CM
+
+ALGOS = ["hsgd", "jfl", "tdcd", "c-hsgd", "c-tdcd"]
+# measured per-step compute time (s) at paper scale (Table IV shows 0.05-0.8)
+T_COMPUTE = {"hsgd": 0.06, "jfl": 0.48, "tdcd": 0.06, "c-hsgd": 0.06, "c-tdcd": 0.06}
+
+
+def fig4(dataset="organamnist", rounds=40, compute_scale=1.0, tag="fig4"):
+    exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
+                          alpha=0.25, q=1, p=2, lr=0.02)
+    print(f"# {tag}: {dataset} AUC-vs-time (WAN link model, compute x{compute_scale})")
+    csv_row("algo", "steps", "auc_roc", "f1", "train_loss", "sim_time_s", "wall_s")
+    results = {}
+    for algo in ALGOS:
+        out = run_algorithm(exp, algo, rounds)
+        m = eval_model(exp, out["global_model"])
+        sizes = sizes_for(exp, algo)
+        steps = len(out["losses"])
+        t_c = T_COMPUTE[algo] * compute_scale
+        sim_t = CM.time_to_step(sizes, out["fed"], t_c, steps) \
+            if algo not in ("jfl",) else steps * (t_c + (sizes.theta0 + sizes.z1 + sizes.z2) / CM.WAN.dev_down)
+        csv_row(algo, steps, round(m["auc_roc"], 4), round(m["f1"], 4),
+                round(float(out["losses"][-1]), 4), round(sim_t, 1), round(out["wall"], 1))
+        results[algo] = (m, sim_t)
+    return results
+
+
+def main():
+    for ds in ("organamnist", "esr", "mimic3"):
+        fig4(ds, tag=f"fig4-{ds}")
+    # Fig. 6: compute-time sensitivity on OrganAMNIST
+    fig4("organamnist", compute_scale=0.1, tag="fig6-compute-x0.1")
+    fig4("organamnist", compute_scale=10.0, tag="fig6-compute-x10")
+
+
+if __name__ == "__main__":
+    main()

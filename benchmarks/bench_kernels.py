@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: interpret-mode Pallas kernel vs jnp oracle,
+us/call + correctness deltas (wall numbers are CPU-interpret; the BlockSpec
+tiling is the TPU story)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+
+
+def timeit(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    print("# kernel microbenchmarks (CPU interpret mode)")
+    csv_row("kernel", "shape", "us_per_call_kernel", "us_per_call_ref", "max_err")
+    key = jax.random.PRNGKey(0)
+
+    x = jax.random.normal(key, (64, 512))
+    t_k = timeit(lambda a: ops.topk_sparsify(a, 0.1), x)
+    t_r = timeit(lambda a: ref.topk_sparsify_ref(a, 51), x)
+    err = float(jnp.max(jnp.abs(ops.topk_sparsify(x, 0.1) - ref.topk_sparsify_ref(x, 51))))
+    csv_row("topk_sparsify", "64x512", round(t_k, 1), round(t_r, 1), err)
+
+    B, S, H, D = 1, 256, 4, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    t_k = timeit(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    t_r = timeit(lambda a, b, c: ref.flash_attention_ref(a, b, c), qf, kf, vf)
+    out = ops.flash_attention(q, k, v).transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(qf, kf, vf))))
+    csv_row("flash_attention", f"{B}x{S}x{H}x{D}", round(t_k, 1), round(t_r, 1), err)
+
+    Bs, T, C = 2, 256, 128
+    a = jax.nn.sigmoid(jax.random.normal(key, (Bs, T, C)))
+    b = jax.random.normal(jax.random.PRNGKey(3), (Bs, T, C))
+    h0 = jnp.zeros((Bs, C))
+    t_k = timeit(lambda x1, x2, x3: ops.ssm_scan(x1, x2, x3)[0], a, b, h0)
+    t_r = timeit(lambda x1, x2, x3: ref.ssm_scan_ref(x1, x2, x3)[0], a, b, h0)
+    err = float(jnp.max(jnp.abs(ops.ssm_scan(a, b, h0)[0] - ref.ssm_scan_ref(a, b, h0)[0])))
+    csv_row("ssm_scan", f"{Bs}x{T}x{C}", round(t_k, 1), round(t_r, 1), err)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.common.pytree import tree_bytes
+from repro.core import comm_model as CM
+from repro.core.baselines import make_runner, merge_groups_for_tdcd
+from repro.core.hsgd import global_model, init_state, make_group_weights
+from repro.core.metrics import evaluate_global
+from repro.data.partition import hybrid_partition
+from repro.data.synthetic import DATASETS, flatten_for_tower, make_dataset, vertical_split
+from repro.models.split_model import cnn_hybrid, lstm_hybrid
+
+
+def setup_experiment(dataset="organamnist", n=1024, groups=4, devices=32, alpha=0.25,
+                     q=1, p=1, lr=0.02, seed=0, compression_k=0.0, quant=0):
+    spec = DATASETS[dataset]
+    fed = FederationConfig(num_groups=groups, devices_per_group=devices, alpha=alpha,
+                           local_interval=q, global_interval=p)
+    train = TrainConfig(learning_rate=lr, compression_k=compression_k,
+                        quantization_bits=quant)
+    X, y = make_dataset(spec, n, seed=seed)
+    fdata = hybrid_partition(spec, X, y, fed, seed=seed)
+    data = {k: jnp.asarray(v) for k, v in fdata.stacked().items()}
+    if dataset == "organamnist":
+        model = cnn_hybrid(h_rows=11, n_classes=spec.n_classes)
+    elif dataset == "esr":
+        model = lstm_hybrid(n_features=178, hospital_features=89, n_classes=spec.n_classes)
+    else:
+        model = lstm_hybrid(n_features=76, hospital_features=36, n_classes=spec.n_classes)
+    return dict(spec=spec, fed=fed, train=train, model=model, data=data, X=X, y=y)
+
+
+def run_algorithm(exp, algo, rounds, seed=0):
+    """Run one algorithm; returns dict with losses, metrics, sizes, fed."""
+    model, fed, train = exp["model"], exp["fed"], exp["train"]
+    runner, eff_fed = make_runner(algo, model, fed, train)
+    data = exp["data"]
+    if algo in ("tdcd", "c-tdcd", "centralized"):
+        raw = merge_groups_for_tdcd({k: np.asarray(v) for k, v in data.items()})
+        data = {k: jnp.asarray(v) for k, v in raw.items()}
+    w = make_group_weights(data)
+    key = jax.random.PRNGKey(seed)
+    state = runner.init(key) if algo == "jfl" else init_state(key, model, eff_fed, data)
+    t0 = time.time()
+    state, losses = runner.run(state, data, w, rounds=rounds)
+    losses = np.asarray(jax.device_get(losses))
+    wall = time.time() - t0
+    gm = runner.global_model(state, w) if algo == "jfl" else global_model(state, w)
+    return dict(losses=losses, wall=wall, global_model=gm, fed=eff_fed, data=data)
+
+
+def eval_model(exp, gm):
+    spec = exp["spec"]
+    X1, X2 = vertical_split(spec, exp["X"])
+    return evaluate_global(exp["model"], gm,
+                           flatten_for_tower(spec, X1), flatten_for_tower(spec, X2),
+                           exp["y"])
+
+
+def sizes_for(exp, algo):
+    """Per-event message sizes for the comm model."""
+    model, fed, train, spec = exp["model"], exp["fed"], exp["train"], exp["spec"]
+    params = model.init(jax.random.PRNGKey(0))
+    embed_dim = 64
+    batch = fed.sampled_devices
+    z_el = batch * embed_dim
+    comp_k = train.compression_k if algo in ("c-hsgd", "c-tdcd") else 0.0
+    quant = train.quantization_bits if algo in ("c-hsgd", "c-tdcd") else 0
+    if algo in ("c-hsgd", "c-tdcd") and not comp_k:
+        comp_k, quant = 0.25, 128
+    raw_upfront = 0.0
+    if algo in ("tdcd", "c-tdcd"):
+        raw_upfront = spec.raw_size_mb * 1e6
+    return CM.message_sizes(params, z_el, z_el, fed.sampled_devices,
+                            comp_k, quant, raw_upfront)
+
+
+def comm_bytes_at_step(exp, algo, sizes, step):
+    fed = exp["fed"]
+    if algo == "jfl":
+        # VFL exchange EVERY step per pair + model sync every P
+        per_iter = (sizes.theta0 + sizes.z1 + sizes.z2) * sizes.n_active \
+            + (sizes.theta0 + sizes.theta1 + sizes.theta2) * sizes.n_active / fed.global_interval
+        return per_iter * step
+    eff = fed
+    if algo in ("tdcd", "c-tdcd"):
+        eff = FederationConfig(local_interval=fed.local_interval,
+                               global_interval=10**9)  # no global phase
+        return CM.comm_cost_per_iteration(sizes, FederationConfig(
+            local_interval=fed.local_interval, global_interval=10**9)) * step + sizes.raw_upfront
+    return CM.total_comm_cost(sizes, eff, step)
+
+
+def csv_row(*cols):
+    print(",".join(str(c) for c in cols))

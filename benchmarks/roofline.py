@@ -1,0 +1,109 @@
+"""§Roofline: build the per-(arch x shape) roofline table from the dry-run
+artifacts (artifacts/dryrun/*.json) and emit the EXPERIMENTS.md section.
+
+Terms (per chip, TPU v5e): compute = FLOPs/197e12, memory = bytes/819e9,
+collective = collective_bytes/50e9. Training combines the three programs with
+the paper's amortization: step + exchange/Q + global_agg/P (default P=8, Q=4).
+MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (decode/prefill fwd-only).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.common.config import INPUT_SHAPES
+
+PEAK = {"compute": 197e12, "memory": 819e9, "collective": 50e9}
+P_DEFAULT, Q_DEFAULT = 8, 4
+
+
+def model_flops_per_device(rec, shape_name, n_chips):
+    shape = INPUT_SHAPES[shape_name]
+    n_active = rec["active_params"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_active * tokens / n_chips
+    tokens = shape.global_batch  # one new token per request
+    return 2 * n_active * tokens / n_chips
+
+
+def combined_terms(rec, P=P_DEFAULT, Q=Q_DEFAULT):
+    progs = rec["programs"]
+    out = {}
+    if "train_step" in progs:
+        for key in ("compute_s", "memory_s", "collective_s", "traced_flops_per_device",
+                    "flops_per_device", "bytes_per_device", "collective_bytes_per_device"):
+            out[key] = (progs["train_step"][key] + progs["exchange"][key] / Q
+                        + progs["global_agg"][key] / P)
+    else:
+        p = progs["serve_step"]
+        out = {k: p[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "traced_flops_per_device",
+                                 "flops_per_device", "bytes_per_device",
+                                 "collective_bytes_per_device")}
+    return out
+
+
+def load(art_dir="artifacts/dryrun", mesh_tag="pod"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, f"*__{mesh_tag}.json"))):
+        rec = json.load(open(f))
+        rows.append(rec)
+    return rows
+
+
+def fmt_table(rows, P=P_DEFAULT, Q=Q_DEFAULT):
+    lines = [
+        f"| arch | shape | compute_s | memory_s | collective_s | dominant | model/HLO flops | note |",
+        f"|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in rows:
+        arch, shape = rec["arch"], rec["shape"]
+        if rec.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | - | - | - | - | - | SKIP: {rec['reason']} |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | - | - | - | - | - | ERROR |")
+            continue
+        t = combined_terms(rec, P, Q)
+        terms = {"compute": t["compute_s"], "memory": t["memory_s"],
+                 "collective": t["collective_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops_per_device(rec, shape, rec["n_chips"])
+        ratio = mf / max(t["traced_flops_per_device"], 1)
+        lines.append(
+            f"| {arch} | {shape} | {terms['compute']:.2e} | {terms['memory']:.2e} "
+            f"| {terms['collective']:.2e} | **{dom}** | {ratio:.2f} | |"
+        )
+    return "\n".join(lines)
+
+
+def main(art: str = "artifacts/dryrun"):
+    rows = load(art, "pod")
+    print("## Roofline (single-pod 16x16, P=8 Q=4)\n")
+    print(fmt_table(rows))
+    # bottleneck recommendations
+    print("\n### Dominant-term movers\n")
+    for rec in rows:
+        if rec.get("status") != "ok":
+            continue
+        t = combined_terms(rec)
+        terms = {"compute": t["compute_s"], "memory": t["memory_s"], "collective": t["collective_s"]}
+        dom = max(terms, key=terms.get)
+        hint = {
+            "compute": "raise per-chip arithmetic intensity (larger microbatch, fused ops); compute-bound is the roofline goal",
+            "memory": "cut HBM traffic: bf16 remat saves, fuse norms/rope into matmuls, blockwise attention tiles",
+            "collective": "amortize further with larger P/Q (paper strategy 1-2) or compress exchanged ζ (C-HSGD top-k kernel)",
+        }[dom]
+        print(f"- {rec['arch']} × {rec['shape']}: {dom}-bound -> {hint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  python -m benchmarks.run            # quick suite (all benches, small sizes)
+  python -m benchmarks.run --only bench_kernels
+
+Each bench prints ``name,us_per_call,derived`` style CSV blocks.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="bench module name (bench_convergence, bench_comm_cost, "
+                         "bench_compute_cost, bench_adaptive, bench_kernels, roofline)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        bench_adaptive,
+        bench_comm_cost,
+        bench_compute_cost,
+        bench_convergence,
+        bench_kernels,
+        roofline,
+    )
+
+    benches = {
+        "bench_kernels": bench_kernels.main,
+        "bench_convergence": bench_convergence.main,
+        "bench_comm_cost": bench_comm_cost.main,
+        "bench_compute_cost": bench_compute_cost.main,
+        "bench_adaptive": bench_adaptive.main,
+        "roofline": roofline.main,
+    }
+    todo = [args.only] if args.only else list(benches)
+    for name in todo:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            benches[name]()
+        except FileNotFoundError as e:  # roofline artifacts may be absent
+            print(f"skipped ({e})")
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====")
+
+
+if __name__ == "__main__":
+    main()

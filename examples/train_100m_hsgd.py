@@ -1,0 +1,92 @@
+"""End-to-end driver: train a ~100M-parameter dense transformer with the
+paper's HSGD federation (hospital tower / device tower / combined backbone,
+stale ζ exchange every Q steps) on synthetic token streams for a few hundred
+steps.
+
+  PYTHONPATH=src python examples/train_100m_hsgd.py            # 300 steps
+  PYTHONPATH=src python examples/train_100m_hsgd.py --steps 20 # smoke
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.common.config import ModelConfig
+from repro.launch.steps import make_exchange_step, make_hsgd_train_step
+from repro.models.split_model import llm_hybrid
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="dense-100m", family="dense", num_layers=12, d_model=640,
+        num_heads=10, num_kv_heads=5, d_ff=2560, vocab_size=32768,
+        mlp="swiglu", source="examples/train_100m_hsgd.py",
+    )
+
+
+def synthetic_stream(rng, vocab, batch, seq):
+    """Markov-ish synthetic tokens: next token correlated with previous."""
+    base = rng.randint(0, vocab, (batch, seq + 1))
+    drift = (base[:, :-1] + rng.randint(0, 17, (batch, seq))) % vocab
+    mask = rng.rand(batch, seq) < 0.7
+    toks = np.where(mask, drift, base[:, 1:])
+    return base[:, :-1], toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--q", type=int, default=4, help="exchange interval Q")
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    model = llm_hybrid(cfg, n_tower=2, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.common.pytree import tree_size
+
+    n_params = sum(tree_size(params[k]) for k in params)
+    print(f"hybrid model: {n_params/1e6:.1f}M params "
+          f"(combined {tree_size(params['theta0'])/1e6:.1f}M)")
+
+    step = jax.jit(make_hsgd_train_step(model, lr=args.lr))
+    exch = jax.jit(make_exchange_step(model))
+    rng = np.random.RandomState(0)
+
+    stale = None
+    t0 = time.time()
+    losses = []
+    for t in range(args.steps):
+        if t % args.q == 0:
+            inp, tgt = synthetic_stream(rng, cfg.vocab_size, args.batch, args.seq)
+            s1 = args.seq // 2
+            batch = {
+                "x1": jnp.asarray(inp[:, :s1]),
+                "x2": jnp.asarray(inp[:, s1:]),
+                "y": jnp.asarray(tgt),
+            }
+            stale = exch(params, batch)
+        params, loss = step(params, stale, batch)
+        losses.append(float(loss))
+        if t % 10 == 0 or t == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {t:4d}  loss {losses[-1]:7.4f}  ({dt/(t+1):.2f}s/step)")
+    assert losses[-1] < losses[0], "training must reduce loss"
+    print(f"done: {losses[0]:.3f} -> {losses[-1]:.3f} in {time.time()-t0:.0f}s")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: communication-efficient hybrid federated learning (HSGD) in JAX."""
+__version__ = "1.0.0"

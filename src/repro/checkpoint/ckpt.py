@@ -1,0 +1,50 @@
+"""Minimal dependency-free checkpointing: flattened pytree -> .npz + manifest.
+
+Multi-host note: in a real pod deployment each host saves its addressable
+shards under a per-host suffix; here (single-host container) we gather to
+host numpy. The format is stable across restarts and tested round-trip.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.common.pytree import flatten_dict, unflatten_dict
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0, extra: Dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    leaves = flatten_dict(_to_nested_dict(params))
+    arrays = {k: np.asarray(v) for k, v in leaves.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(arrays),
+        "extra": extra or {},
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in manifest["keys"]}
+    params = unflatten_dict(flat)
+    return params, manifest["step"], manifest.get("extra", {})
+
+
+def _to_nested_dict(tree):
+    """Convert tuples/lists in a pytree to indexed dicts for stable flattening."""
+    if isinstance(tree, dict):
+        return {str(k): _to_nested_dict(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {f"__seq{i}": _to_nested_dict(v) for i, v in enumerate(tree)}
+    return tree

@@ -1,0 +1,1 @@
+from repro.common import config, pytree, sharding  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays (or ShapeDtypeStructs)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over pytrees."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Inner product of two pytrees."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree_util.tree_leaves(leaves))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted mean of a list of pytrees (paper eq. (2))."""
+    wsum = sum(weights)
+    out = tree_scale(trees[0], weights[0] / wsum)
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_axpy(w / wsum, t, out)
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b)
+    return all(jax.tree_util.tree_leaves(oks))
+
+
+def tree_has_nan(tree) -> bool:
+    bad = jax.tree.map(lambda x: bool(jnp.any(jnp.isnan(x))), tree)
+    return any(jax.tree_util.tree_leaves(bad))
+
+
+def flatten_dict(d: dict, prefix: str = "", sep: str = "/") -> dict:
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{sep}{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, key, sep))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(flat: dict, sep: str = "/") -> dict:
+    out: dict = {}
+    for k, v in flat.items():
+        parts = k.split(sep)
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

@@ -1,0 +1,166 @@
+"""Adaptive strategies 1–3 (paper §VI) + the ρ/δ pre-training probes.
+
+Theorem 1 (eq. 17):  with η ≤ 1/(8Pρ),
+  E[ (1/R) Σ ||∇F(θ̃^{rP})||² ] ≤ 4(F(θ̃⁰) − F*)/(ηT) + 12Pρηδ² + 96Q²ρ²η²δ²
+
+Strategy 1: minimum communication for a target bound Ξ is at Λ = P/Q = 1.
+Strategy 2: P* = Q* = sqrt( F(θ̃⁰) / (24 ρ² η² δ² T) )   (E[F(θ̃^T)] ≈ 0).
+Strategy 3: η* = min(η₂, 1/(8Pρ)) with η₂ the positive root of
+  3aη² + 2bη − c = 0,  a = 24Q²Pρ²δ², b = 3P²ρδ², c = (P/4)||∇F||²;
+  η* decreases when P grows (Q fixed) and when Q grows (P/Q fixed).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FederationConfig
+from repro.common.pytree import tree_dot, tree_norm, tree_sub
+from repro.core import federation as F
+from repro.models.split_model import HybridModel
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1
+# ---------------------------------------------------------------------------
+
+
+def convergence_bound(F0: float, FT: float, rho: float, delta: float,
+                      eta: float, P: int, Q: int, T: int) -> float:
+    """The right-hand side Γ(P,Q) of eq. (17)."""
+    return 4.0 * (F0 - FT) / (eta * T) + 12.0 * P * rho * eta * delta**2 \
+        + 96.0 * Q**2 * rho**2 * eta**2 * delta**2
+
+
+def max_learning_rate(P: int, rho: float) -> float:
+    """Theorem 1's step-size condition η ≤ 1/(8Pρ)."""
+    return 1.0 / (8.0 * P * rho)
+
+
+# ---------------------------------------------------------------------------
+# Strategy 1 — P = Q
+# ---------------------------------------------------------------------------
+
+
+def strategy1_lambda_lower_bound(F0: float, FT: float, rho: float, delta: float,
+                                 eta: float, P: int, T: int, target: float) -> float:
+    """Λ ≥ 4√6·Pρηδ / sqrt(Ξ − 4(F0−FT)/(ηT) − 12Pρηδ²)  (Prop. 1)."""
+    denom_sq = target - 4.0 * (F0 - FT) / (eta * T) - 12.0 * P * rho * eta * delta**2
+    if denom_sq <= 0:
+        return math.inf  # target unreachable at this P/η
+    return 4.0 * math.sqrt(6.0) * P * rho * eta * delta / math.sqrt(denom_sq)
+
+
+def strategy1_intervals(Q: int) -> Tuple[int, int]:
+    """Adaptive strategy 1: set P = Q."""
+    return Q, Q
+
+
+# ---------------------------------------------------------------------------
+# Strategy 2 — optimal P = Q
+# ---------------------------------------------------------------------------
+
+
+def strategy2_optimal_interval(F0: float, rho: float, delta: float, eta: float, T: int,
+                               FT: float = 0.0) -> int:
+    """P* = Q* = sqrt((F0 − E[F_T]) / (24 ρ² η² δ² T)), E[F_T] approximated by 0."""
+    q = math.sqrt(max(F0 - FT, 1e-12) / (24.0 * rho**2 * eta**2 * delta**2 * T))
+    return max(1, int(round(q)))
+
+
+# ---------------------------------------------------------------------------
+# Strategy 3 — learning-rate adjustment
+# ---------------------------------------------------------------------------
+
+
+def strategy3_learning_rate(P: int, Q: int, rho: float, delta: float,
+                            grad_norm_sq: float) -> float:
+    """η* = min(η₂, 1/(8Pρ)) from Prop. 3."""
+    a = 24.0 * Q**2 * P * rho**2 * delta**2
+    b = 3.0 * P**2 * rho * delta**2
+    c = (P / 4.0) * grad_norm_sq
+    if a <= 0:
+        return max_learning_rate(P, rho)
+    eta2 = (-2.0 * b + math.sqrt(4.0 * b**2 + 12.0 * a * c)) / (6.0 * a)
+    return min(eta2, max_learning_rate(P, rho))
+
+
+# ---------------------------------------------------------------------------
+# ρ / δ estimation probes (pre-training, §VI-B "small number of pre-training")
+# ---------------------------------------------------------------------------
+
+
+def estimate_rho_delta(
+    model: HybridModel,
+    params,
+    data: Dict[str, jnp.ndarray],
+    key,
+    n_probes: int = 8,
+    batch: int = 32,
+    perturb: float = 1e-2,
+) -> Dict[str, float]:
+    """Estimate the Lipschitz constant ρ and gradient noise δ of Assumptions 1–2.
+
+    δ²: variance of mini-batch gradients around their mean.
+    ρ : max ||∇F(θ+u) − ∇F(θ)|| / ||u|| over random perturbations u.
+    Returns also F0 (initial loss) for strategies 1–2.
+    """
+    M, K = data["y"].shape[:2]
+    x1 = data["x1"].reshape((M * K,) + data["x1"].shape[2:])
+    x2 = data["x2"].reshape((M * K,) + data["x2"].shape[2:])
+    y = data["y"].reshape(-1)
+
+    loss_fn = lambda p, a, b, yy: model.full_loss(p, a, b, yy)
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    val_fn = jax.jit(loss_fn)
+
+    keys = jax.random.split(key, n_probes + 1)
+    grads = []
+    for i in range(n_probes):
+        idx = jax.random.choice(keys[i], M * K, (batch,), replace=False)
+        grads.append(grad_fn(params, x1[idx], x2[idx], y[idx]))
+    mean_grad = jax.tree.map(lambda *xs: sum(xs) / len(xs), *grads)
+    dev = [tree_dot(tree_sub(g, mean_grad), tree_sub(g, mean_grad)) for g in grads]
+    delta2 = float(sum(dev) / len(dev))
+
+    # Lipschitz probe on the full-batch-ish gradient
+    idx = jax.random.choice(keys[-1], M * K, (min(4 * batch, M * K),), replace=False)
+    g_base = grad_fn(params, x1[idx], x2[idx], y[idx])
+    rho_max = 0.0
+    for i in range(4):
+        k = jax.random.fold_in(keys[-1], i)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        ks = jax.random.split(k, len(leaves))
+        u = jax.tree_util.tree_unflatten(
+            treedef, [perturb * jax.random.normal(kk, p.shape, p.dtype) for kk, p in zip(ks, leaves)]
+        )
+        p2 = jax.tree.map(jnp.add, params, u)
+        g2 = grad_fn(p2, x1[idx], x2[idx], y[idx])
+        num = float(tree_norm(tree_sub(g2, g_base)))
+        den = float(tree_norm(u))
+        rho_max = max(rho_max, num / max(den, 1e-12))
+
+    F0 = float(val_fn(params, x1[: 4 * batch], x2[: 4 * batch], y[: 4 * batch]))
+    gnorm2 = float(tree_dot(g_base, g_base))
+    return {"rho": rho_max, "delta": math.sqrt(max(delta2, 1e-12)), "F0": F0,
+            "grad_norm_sq": gnorm2}
+
+
+def recommend_settings(probe: Dict[str, float], T: int, eta: float,
+                       fed: FederationConfig) -> Dict[str, float]:
+    """One-stop application of the three strategies."""
+    rho, delta, F0 = probe["rho"], probe["delta"], probe["F0"]
+    Pstar = strategy2_optimal_interval(F0, rho, delta, eta, T)
+    eta_star = strategy3_learning_rate(Pstar, Pstar, rho, delta, probe["grad_norm_sq"])
+    return {
+        "P": Pstar,
+        "Q": Pstar,  # strategy 1
+        "eta": eta_star,
+        "eta_max": max_learning_rate(Pstar, rho),
+        "bound_at_star": convergence_bound(F0, 0.0, rho, delta, eta_star, Pstar, Pstar, T),
+    }

@@ -1,0 +1,165 @@
+"""Baselines of §VII-A1.
+
+* JFL  (Yu et al. 2022): VFL per (device, hospital) pair — NO local
+  aggregation, so every sampled device owns a full private (θ0,θ1,θ2) triple
+  and the hospital trains a unique model per device; global aggregation over
+  all pairs every P steps.
+* TDCD (Das et al.): two-tier — NO global aggregation. Raw data of all groups
+  is merged into a single group first (the paper charges this raw-data
+  transmission to TDCD's communication bill); then the HSGD machinery runs
+  with M=1 and the global phase disabled.
+* C-HSGD / C-TDCD: the respective algorithm with top-k + b-level quantization
+  applied to the exchanged messages (core/compression.py).
+* Centralized SGD: reference upper bound used in tests (== HSGD with
+  M=1, α=1, P=Q=1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.hsgd import HSGDRunner, HSGDState, init_state
+from repro.models.split_model import HybridModel
+from repro.optim import halving_schedule
+
+
+# ---------------------------------------------------------------------------
+# JFL
+# ---------------------------------------------------------------------------
+
+
+class JFLState(NamedTuple):
+    params: Dict[str, Any]  # each leaf [M, A, ...] — unique model per pair
+    key: jnp.ndarray
+    step: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class JFLRunner:
+    model: HybridModel
+    fed: FederationConfig
+    train: TrainConfig
+
+    def init(self, key, dtype=jnp.float32) -> JFLState:
+        k_init, k_run = jax.random.split(key)
+        p = self.model.init(k_init, dtype)
+        M, A = self.fed.num_groups, self.fed.sampled_devices
+
+        def rep(x):
+            return jnp.broadcast_to(x[None, None], (M, A) + x.shape)
+
+        return JFLState(jax.tree.map(rep, p), k_run, jnp.zeros((), jnp.int32))
+
+    def _pair_loss(self, p, x1_n, x2_n, y_n):
+        return self.model.full_loss(p, x1_n[None], x2_n[None], y_n[None])
+
+    def run(self, state: JFLState, data, group_weights, rounds: int):
+        fed, train = self.fed, self.train
+        P = fed.global_interval
+        lr_fn = halving_schedule(train.learning_rate, train.lr_halve_every)
+        grad_fn = jax.grad(self._pair_loss)
+
+        @jax.jit
+        def go(state, data, group_weights):
+            def round_body(state, _):
+                # global aggregation over ALL pairs (weighted by group size)
+                w = group_weights / jnp.sum(group_weights)
+
+                def agg(x):
+                    wb = w.reshape((-1,) + (1,) * (x.ndim - 2)).astype(x.dtype)
+                    g = jnp.sum(jnp.mean(x, axis=1) * wb, axis=0)
+                    return jnp.broadcast_to(g[None, None], x.shape)
+
+                params = jax.tree.map(agg, state.params)
+                key, k_s = jax.random.split(state.key)
+                idx = F.sample_participants(k_s, fed)
+                batch = F.gather_batch(data, idx)
+
+                def sgd(carry, _):
+                    params, step = carry
+                    lr = lr_fn(step)
+                    g = jax.vmap(jax.vmap(grad_fn))(params, batch["x1"], batch["x2"], batch["y"])
+                    loss = jax.vmap(jax.vmap(self._pair_loss))(params, batch["x1"], batch["x2"], batch["y"])
+                    params = jax.tree.map(lambda p_, g_: p_ - lr * g_.astype(p_.dtype), params, g)
+                    return (params, step + 1), jnp.mean(loss)
+
+                (params, step), losses = jax.lax.scan(sgd, (params, state.step), None, length=P)
+                return JFLState(params, key, step), losses
+
+            state, losses = jax.lax.scan(round_body, state, None, length=rounds)
+            return state, losses.reshape(-1)
+
+        return go(state, data, group_weights)
+
+    def global_model(self, state: JFLState, group_weights):
+        w = group_weights / jnp.sum(group_weights)
+
+        def agg(x):
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 2)).astype(x.dtype)
+            return jnp.sum(jnp.mean(x, axis=1) * wb, axis=0)
+
+        return jax.tree.map(agg, state.params)
+
+
+# ---------------------------------------------------------------------------
+# TDCD: merged two-tier run
+# ---------------------------------------------------------------------------
+
+
+def merge_groups_for_tdcd(data: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Combine all hospital-patient groups into one (raw-data transmission)."""
+    return {k: np.asarray(v).reshape((1, -1) + v.shape[2:]) for k, v in data.items()}
+
+
+def tdcd_runner(model: HybridModel, fed: FederationConfig, train: TrainConfig) -> Tuple[HSGDRunner, FederationConfig]:
+    merged_fed = FederationConfig(
+        num_groups=1,
+        devices_per_group=fed.devices_per_group * fed.num_groups,
+        alpha=fed.alpha,
+        local_interval=fed.local_interval,
+        global_interval=fed.local_interval,  # Λ=1; global phase disabled anyway
+        hospital_feature_frac=fed.hospital_feature_frac,
+        non_iid_labels_per_group=fed.non_iid_labels_per_group,
+    )
+    return HSGDRunner(model, merged_fed, train, do_global_agg=False), merged_fed
+
+
+# ---------------------------------------------------------------------------
+# Centralized SGD reference
+# ---------------------------------------------------------------------------
+
+
+def centralized_runner(model: HybridModel, fed: FederationConfig, train: TrainConfig):
+    cfed = FederationConfig(
+        num_groups=1,
+        devices_per_group=fed.devices_per_group * fed.num_groups,
+        alpha=1.0,
+        local_interval=1,
+        global_interval=1,
+        hospital_feature_frac=fed.hospital_feature_frac,
+    )
+    return HSGDRunner(model, cfed, train), cfed
+
+
+def make_runner(name: str, model: HybridModel, fed: FederationConfig, train: TrainConfig):
+    """Algorithm registry: hsgd | c-hsgd | jfl | tdcd | c-tdcd | centralized."""
+    name = name.lower()
+    if name in ("hsgd", "c-hsgd"):
+        if name == "c-hsgd" and not (train.compression_k or train.quantization_bits):
+            train = TrainConfig(**{**train.__dict__, "compression_k": 0.25, "quantization_bits": 128})
+        return HSGDRunner(model, fed, train), fed
+    if name == "jfl":
+        return JFLRunner(model, fed, train), fed
+    if name in ("tdcd", "c-tdcd"):
+        if name == "c-tdcd" and not (train.compression_k or train.quantization_bits):
+            train = TrainConfig(**{**train.__dict__, "compression_k": 0.25, "quantization_bits": 128})
+        return tdcd_runner(model, fed, train)
+    if name == "centralized":
+        return centralized_runner(model, fed, train)
+    raise ValueError(f"unknown algorithm {name}")

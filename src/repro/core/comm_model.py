@@ -1,0 +1,131 @@
+"""Communication-cost and wall-time models (paper §VI Prop. 1 and §VII-A3).
+
+Two link models:
+  * WAN  — the paper's e-health network (mobile 110/14 Mbps down/up between
+    devices and edge; broadband 204/74 Mbps among edge/hospital/cloud), used
+    to reproduce Figs. 4–9 and Table II;
+  * ICI  — the TPU-pod adaptation (symmetric ~50 GB/s links), used by the
+    roofline (§Roofline) where the same 1/P and 1/Q amortization governs the
+    collective term.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.common.config import FederationConfig
+from repro.common.pytree import tree_bytes
+from repro.core.compression import compressed_bytes
+
+MBIT = 1e6 / 8.0  # bytes per second per Mbps
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    dev_up: float  # device -> edge (B/s)
+    dev_down: float  # edge -> device
+    bb_up: float  # edge/hospital -> cloud
+    bb_down: float  # cloud -> edge/hospital
+
+
+WAN = LinkModel(dev_up=14 * MBIT, dev_down=110 * MBIT, bb_up=74 * MBIT, bb_down=204 * MBIT)
+ICI = LinkModel(dev_up=50e9, dev_down=50e9, bb_up=50e9, bb_down=50e9)
+
+
+@dataclass(frozen=True)
+class MessageSizes:
+    """Per-event wire sizes (bytes) for one hospital-patient group."""
+
+    theta0: float
+    theta1: float
+    theta2: float
+    z1: float  # hospital -> devices intermediate results (whole mini-batch)
+    z2: float  # devices -> hospital
+    n_active: int  # |A_m|
+    raw_upfront: float = 0.0  # TDCD's raw-data merge
+
+
+def message_sizes(
+    model_params: Dict,
+    z1_elements: int,
+    z2_elements: int,
+    n_active: int,
+    compression_k: float = 0.0,
+    quant_levels: int = 0,
+    raw_upfront: float = 0.0,
+    bytes_per_el: int = 4,
+) -> MessageSizes:
+    t0 = tree_bytes(model_params["theta0"])
+    t1 = tree_bytes(model_params["theta1"])
+    t2 = tree_bytes(model_params["theta2"])
+    if compression_k or quant_levels:
+        t0_el = t0 // bytes_per_el
+        t0 = compressed_bytes(t0_el, compression_k or 1.0, quant_levels, bytes_per_el)
+        z1b = compressed_bytes(z1_elements, compression_k or 1.0, quant_levels, bytes_per_el)
+        z2b = compressed_bytes(z2_elements, compression_k or 1.0, quant_levels, bytes_per_el)
+    else:
+        z1b = z1_elements * bytes_per_el
+        z2b = z2_elements * bytes_per_el
+    return MessageSizes(t0, t1, t2, z1b, z2b, n_active, raw_upfront)
+
+
+def comm_cost_per_iteration(sizes: MessageSizes, fed: FederationConfig) -> float:
+    """Eq. (19)'s integrand: C(P,Q)/T for a single group, in bytes/iteration.
+
+      C(P,Q) = ( |θ1|/P + (|A||θ2| + |θ0| + |Z1| + |Z2|)/Q ) · M · T
+    """
+    P, Q = fed.global_interval, fed.local_interval
+    per_global = sizes.theta1 / P
+    per_local = (sizes.n_active * sizes.theta2 + sizes.theta0 + sizes.z1 + sizes.z2) / Q
+    return per_global + per_local
+
+
+def total_comm_cost(sizes: MessageSizes, fed: FederationConfig, iterations: int) -> float:
+    """Total bytes for one group over ``iterations`` steps (+ TDCD upfront)."""
+    return comm_cost_per_iteration(sizes, fed) * iterations + sizes.raw_upfront
+
+
+def round_time(
+    sizes: MessageSizes,
+    fed: FederationConfig,
+    t_compute: float,
+    links: LinkModel = WAN,
+) -> float:
+    """§VII-A3: t = t_g + (P/Q)(t_l + t_e) + P · t_c for one global round.
+
+    Devices transmit in parallel (time = one device's payload / link speed);
+    hospital/cloud payloads aggregate the group's models.
+    """
+    P, Q = fed.global_interval, fed.local_interval
+    lam = P // Q
+    # global aggregation: hospital uploads (θ0,θ1,θ2), cloud returns them
+    up = sizes.theta0 + sizes.theta1 + sizes.theta2
+    t_g = up / links.bb_up + up / links.bb_down
+    # local aggregation: each device uploads θ2 (parallel), edge returns θ2
+    t_l = sizes.theta2 / links.dev_up + sizes.theta2 / links.dev_down
+    # exchange: devices upload ζ2 (their own sample's share, parallel);
+    # edge sends θ0 + Z1 down to devices; hospital<->edge over broadband
+    z2_per_dev = sizes.z2 / max(sizes.n_active, 1)
+    t_e = (
+        z2_per_dev / links.dev_up
+        + (sizes.theta0 + sizes.z1) / links.dev_down
+        + (sizes.z1 + sizes.z2 + sizes.theta0) / links.bb_up
+    )
+    return t_g + lam * (t_l + t_e) + P * t_compute
+
+
+def time_to_step(
+    sizes: MessageSizes,
+    fed: FederationConfig,
+    t_compute: float,
+    steps: int,
+    links: LinkModel = WAN,
+    include_upfront: bool = True,
+) -> float:
+    """Wall-clock time after ``steps`` iterations (rounds may be partial)."""
+    P = fed.global_interval
+    rounds = steps / P
+    t = rounds * round_time(sizes, fed, t_compute, links)
+    if include_upfront and sizes.raw_upfront:
+        t += sizes.raw_upfront / links.bb_up
+    return t

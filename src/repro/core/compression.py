@@ -1,0 +1,65 @@
+"""Message compression for the C-HSGD / C-TDCD baselines (paper §VII-A1).
+
+Top-k sparsification (Compressed-VFL, Castiglia et al.) keeps the k largest-
+magnitude entries of the exchanged tensor; the b-level quantization (paper:
+b = 128 -> log2(b)/32 compression of surviving values) snaps values to a
+uniform grid. Differentiable straight-through behaviour is NOT needed — the
+paper compresses *messages*, not gradients, so we compress forward values.
+
+The Pallas kernel twin lives in kernels/topk_sparsify.py; this module is the
+always-available jnp implementation (also the kernel's oracle, re-exported by
+kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Keep the ceil(k_frac * n) largest-|x| entries of each row; zero the rest.
+
+    Operates on the last axis. k_frac >= 1 is a no-op.
+    """
+    if k_frac >= 1.0:
+        return x
+    n = x.shape[-1]
+    k = max(1, int(round(k_frac * n)))
+    mag = jnp.abs(x)
+    thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+    return jnp.where(mag >= thresh, x, 0).astype(x.dtype)
+
+
+def quantize(x: jnp.ndarray, levels: int) -> jnp.ndarray:
+    """Uniform b-level quantize/dequantize per row (last axis)."""
+    if levels <= 1:
+        return x
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12) / (levels - 1)
+    q = jnp.round((x - lo) / scale)
+    return (q * scale + lo).astype(x.dtype)
+
+
+def compress_message(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp.ndarray:
+    y = topk_sparsify(x, k_frac) if 0.0 < k_frac < 1.0 else x
+    if levels and levels > 1:
+        y = quantize(y, levels)
+    return y
+
+
+def compressed_bytes(n_elements: int, k_frac: float, levels: int, dense_bytes_per_el: int = 4) -> float:
+    """Wire size of a compressed message.
+
+    top-k: k values + k indices (32-bit); quantization: log2(b) bits/value.
+    Matches the paper's 'compression ratio log2(b)/32' accounting.
+    """
+    k = n_elements if not (0.0 < k_frac < 1.0) else max(1, int(round(k_frac * n_elements)))
+    bits_per_val = dense_bytes_per_el * 8
+    if levels and levels > 1:
+        bits_per_val = max(1, int(jnp.ceil(jnp.log2(levels))))
+    value_bytes = k * bits_per_val / 8.0
+    index_bytes = 0.0 if k == n_elements else k * 4.0
+    return value_bytes + index_bytes

@@ -1,0 +1,62 @@
+"""Federation bookkeeping: group/device sampling and weighted aggregation.
+
+Implements eq. (1) (local aggregation over the sampled device subset A_m) and
+eq. (2) (global weighted aggregation over groups) plus the A_m / mini-batch
+agreement of Algorithm 1 line 13 as jit-friendly index sampling.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FederationConfig
+
+
+def local_aggregate(theta2_active):
+    """Eq. (1): θ2_m = mean over the sampled devices. [M, A, ...] -> [M, ...]."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=1), theta2_active)
+
+
+def global_aggregate(theta, group_weights):
+    """Eq. (2): weighted mean over groups. [M, ...] -> [...]."""
+    w = group_weights / jnp.sum(group_weights)
+
+    def agg(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return jnp.sum(x * wb, axis=0)
+
+    return jax.tree.map(agg, theta)
+
+
+def broadcast_to_groups(theta, M: int):
+    """Send the global model back to every group. [...] -> [M, ...]."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (M,) + x.shape), theta)
+
+
+def broadcast_to_devices(theta2_group, A: int):
+    """Line 15: every sampled device restarts from the aggregated θ2_m."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[:, None], (x.shape[0], A) + x.shape[1:]), theta2_group
+    )
+
+
+def sample_participants(key, fed: FederationConfig) -> jnp.ndarray:
+    """A_m + ξ_m: per-group device subset (== its samples). [M, A] indices."""
+    M, K, A = fed.num_groups, fed.devices_per_group, fed.sampled_devices
+    keys = jax.random.split(key, M)
+
+    def pick(k):
+        return jax.random.permutation(k, K)[:A]
+
+    return jax.vmap(pick)(keys)
+
+
+def gather_batch(data: Dict[str, jnp.ndarray], idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """data: {x1,x2,y,valid} with leading [M, K]; idx: [M, A] -> [M, A, ...]."""
+
+    def take(x):
+        return jax.vmap(lambda xi, ii: jnp.take(xi, ii, axis=0))(x, idx)
+
+    return {k: take(v) for k, v in data.items()}

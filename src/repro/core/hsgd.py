@@ -1,0 +1,247 @@
+"""Hybrid Stochastic Gradient Descent — the paper's Algorithm 1.
+
+Training runs as a jitted 3-level loop mirroring the paper's timeline:
+
+  scan over R global rounds                      (t mod P == 0 events)
+    ├─ local agg (eq 1) + global agg (eq 2) + broadcasts (Alg. 1 lines 3–9)
+    └─ scan over Λ = P/Q local intervals         (t mod Q == 0 events)
+         ├─ local aggregation (eq 1, lines 10–12)
+         ├─ A_m/ξ_m agreement + intermediate-result EXCHANGE (lines 13–21):
+         │    ζ1 = h1(θ1; X1ξ), ζ2 = h2(θ2; X2ξ), stale θ0 snapshot
+         │    (optionally top-k/quantize compressed — C-HSGD)
+         └─ scan over Q SGD steps (lines 22–26):
+              hospital: (θ0,θ1) step with FRESH ζ1, STALE ζ2   (eqs 5–6)
+              devices:  θ2_n step with STALE θ0, STALE ζ1      (eq 7)
+
+Only the sampled devices A_m are materialized ([M, A, ...]): unsampled
+devices are reset to θ2_m at every local aggregation anyway (line 15), so
+their state never influences the trajectory.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.compression import compress_message
+from repro.models.split_model import HybridModel
+from repro.optim import halving_schedule
+
+
+class HSGDState(NamedTuple):
+    theta0: Any  # [M, ...] combined models
+    theta1: Any  # [M, ...] hospital towers
+    theta2: Any  # [M, A, ...] sampled-device towers
+    stale: Dict[str, Any]  # {"theta0": [M,...], "z1": [M,A,...], "z2": [M,A,...]}
+    batch: Dict[str, jnp.ndarray]  # gathered ξ_m: x1,x2,y,valid [M,A,...]
+    key: jnp.ndarray
+    step: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+
+def init_state(key, model: HybridModel, fed: FederationConfig, data, dtype=jnp.float32) -> HSGDState:
+    """All groups start from the same global model (Alg. 1 line 1)."""
+    k_init, k_run = jax.random.split(key)
+    params = model.init(k_init, dtype)
+    M, A = fed.num_groups, fed.sampled_devices
+    theta0 = F.broadcast_to_groups(params["theta0"], M)
+    theta1 = F.broadcast_to_groups(params["theta1"], M)
+    theta2 = F.broadcast_to_devices(F.broadcast_to_groups(params["theta2"], M), A)
+    # placeholder stale ctx/batch; filled by the first exchange
+    idx = jnp.zeros((M, A), jnp.int32)
+    batch = F.gather_batch(data, idx)
+    z1 = _h1_groups(model, theta1, batch["x1"])
+    z2 = _h2_groups(model, F.local_aggregate(theta2), batch["x2"])
+    stale = {"theta0": theta0, "z1": z1, "z2": z2}
+    return HSGDState(theta0, theta1, theta2, stale, batch, k_run, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Forward helpers (vmapped over groups / devices)
+# ---------------------------------------------------------------------------
+
+
+def _h1_groups(model, theta1, x1):
+    """[M,...]θ1 × [M,A,...]x1 -> ζ1 [M,A,...]."""
+    return jax.vmap(model.h1)(theta1, x1)
+
+
+def _h2_groups(model, theta2_group, x2):
+    """[M,...]θ2_m × [M,A,...]x2 -> ζ2 [M,A,...] (device outputs from θ2_m)."""
+    return jax.vmap(model.h2)(theta2_group, x2)
+
+
+# ---------------------------------------------------------------------------
+# The three gradient rules (eqs. (5)–(7))
+# ---------------------------------------------------------------------------
+
+
+def _hospital_loss(model, theta0_m, theta1_m, batch_m, stale_z2_m):
+    """Group-level loss with fresh ζ1(θ1), stale ζ2 — drives eqs. (5)(6)."""
+    z1 = model.h1(theta1_m, batch_m["x1"])
+    return model.loss(theta0_m, z1, jax.lax.stop_gradient(stale_z2_m), batch_m["y"])
+
+
+def _device_loss(model, theta2_n, x2_n, y_n, stale_theta0_m, stale_z1_n):
+    """Per-device loss with stale θ0, stale ζ1, fresh ζ2(θ2_n) — eq. (7)."""
+    z2 = model.h2(theta2_n, x2_n[None])
+    return model.loss(
+        jax.lax.stop_gradient(stale_theta0_m),
+        jax.lax.stop_gradient(stale_z1_n[None]),
+        z2,
+        y_n[None],
+    )
+
+
+def local_sgd_step(model: HybridModel, state: HSGDState, lr) -> Tuple[HSGDState, jnp.ndarray]:
+    """One iteration of lines 22–26 for every group and sampled device."""
+
+    def h_loss(t0_m, t1_m, b_m, z2_m):
+        return _hospital_loss(model, t0_m, t1_m, b_m, z2_m)
+
+    h_grads = jax.vmap(jax.value_and_grad(h_loss, argnums=(0, 1)))(
+        state.theta0, state.theta1, state.batch, state.stale["z2"]
+    )
+    (losses, (g0, g1)) = h_grads
+
+    def d_loss(t2_n, x2_n, y_n, t0_m, z1_n):
+        return _device_loss(model, t2_n, x2_n, y_n, t0_m, z1_n)
+
+    per_device = jax.vmap(  # over devices within a group
+        jax.grad(d_loss), in_axes=(0, 0, 0, None, 0)
+    )
+    g2 = jax.vmap(per_device)(  # over groups
+        state.theta2, state.batch["x2"], state.batch["y"], state.stale["theta0"], state.stale["z1"]
+    )
+
+    upd = lambda p, g: p - lr * g.astype(p.dtype)
+    theta0 = jax.tree.map(upd, state.theta0, g0)
+    theta1 = jax.tree.map(upd, state.theta1, g1)
+    theta2 = jax.tree.map(upd, state.theta2, g2)
+    new_state = state._replace(theta0=theta0, theta1=theta1, theta2=theta2, step=state.step + 1)
+    return new_state, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Exchange + aggregations
+# ---------------------------------------------------------------------------
+
+
+def exchange(
+    model: HybridModel,
+    state: HSGDState,
+    data,
+    fed: FederationConfig,
+    compression_k: float = 0.0,
+    quant_levels: int = 0,
+) -> HSGDState:
+    """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange."""
+    key, k_sample = jax.random.split(state.key)
+    theta2_group = F.local_aggregate(state.theta2)  # eq (1)
+    theta2 = F.broadcast_to_devices(theta2_group, fed.sampled_devices)  # line 15
+
+    idx = F.sample_participants(k_sample, fed)  # line 13
+    batch = F.gather_batch(data, idx)
+
+    z1 = _h1_groups(model, state.theta1, batch["x1"])
+    z2 = _h2_groups(model, theta2_group, batch["x2"])
+    stale_theta0 = state.theta0
+
+    if compression_k or quant_levels:
+        comp = partial(compress_message, k_frac=compression_k or 1.0, levels=quant_levels)
+        z1 = comp(z1)
+        z2 = comp(z2)
+        stale_theta0 = jax.tree.map(comp, stale_theta0)
+
+    stale = {"theta0": stale_theta0, "z1": z1, "z2": z2}
+    return state._replace(theta2=theta2, stale=stale, batch=batch, key=key)
+
+
+def global_aggregation(state: HSGDState, fed: FederationConfig, group_weights) -> HSGDState:
+    """Eq. (2) + broadcasts (Alg. 1 lines 3–9)."""
+    M, A = fed.num_groups, fed.sampled_devices
+    theta2_group = F.local_aggregate(state.theta2)
+    g0 = F.global_aggregate(state.theta0, group_weights)
+    g1 = F.global_aggregate(state.theta1, group_weights)
+    g2 = F.global_aggregate(theta2_group, group_weights)
+    return state._replace(
+        theta0=F.broadcast_to_groups(g0, M),
+        theta1=F.broadcast_to_groups(g1, M),
+        theta2=F.broadcast_to_devices(F.broadcast_to_groups(g2, M), A),
+    )
+
+
+def global_model(state: HSGDState, group_weights) -> Dict[str, Any]:
+    """The observable global model θ̃ (eq. (2))."""
+    return {
+        "theta0": F.global_aggregate(state.theta0, group_weights),
+        "theta1": F.global_aggregate(state.theta1, group_weights),
+        "theta2": F.global_aggregate(F.local_aggregate(state.theta2), group_weights),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full jitted training run
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HSGDRunner:
+    """Compiled HSGD trainer for a (model, federation, train) configuration."""
+
+    model: HybridModel
+    fed: FederationConfig
+    train: TrainConfig
+    do_global_agg: bool = True  # False reproduces TDCD's missing phase
+
+    def _round(self, state: HSGDState, data, group_weights, lr_fn):
+        fed, model = self.fed, self.model
+        Q, lam = fed.local_interval, fed.lam
+
+        if self.do_global_agg:
+            state = global_aggregation(state, fed, group_weights)
+
+        def interval(state, _):
+            state = exchange(
+                model, state, data, fed,
+                self.train.compression_k, self.train.quantization_bits,
+            )
+
+            def sgd_step(state, _):
+                lr = lr_fn(state.step)
+                state, loss = local_sgd_step(model, state, lr)
+                return state, loss
+
+            state, losses = jax.lax.scan(sgd_step, state, None, length=Q)
+            return state, losses
+
+        state, losses = jax.lax.scan(interval, state, None, length=lam)
+        return state, losses.reshape(-1)
+
+    def run(self, state: HSGDState, data, group_weights, rounds: int):
+        """Execute ``rounds`` global rounds; returns (state, per-step losses)."""
+        lr_fn = halving_schedule(self.train.learning_rate, self.train.lr_halve_every)
+
+        @jax.jit
+        def go(state, data, group_weights):
+            def body(state, _):
+                return self._round(state, data, group_weights, lr_fn)
+
+            return jax.lax.scan(body, state, None, length=rounds)
+
+        state, losses = go(state, data, group_weights)
+        return state, losses.reshape(-1)
+
+
+def make_group_weights(data) -> jnp.ndarray:
+    """K_m weights from the per-group valid-sample counts."""
+    return jnp.sum(data["valid"].astype(jnp.float32), axis=1)

@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container every kernel runs in interpret mode (the TPU lowering
+is the target; interpret executes the same kernel body for validation). Set
+``REPRO_PALLAS_COMPILED=1`` on a real TPU to compile the Mosaic kernels.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+from repro.kernels.topk_sparsify import topk_sparsify_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+def topk_sparsify(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Row-wise top-k sparsification of a message tensor (any rank >= 1)."""
+    if k_frac >= 1.0:
+        return x
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    k = max(1, int(round(k_frac * shape[-1])))
+    out = topk_sparsify_pallas(x2, k, interpret=INTERPRET)
+    return out.reshape(shape)
+
+
+def flash_attention(q, k, v, scale=None, window: int = 0):
+    """q,k,v: [B, S, H, D] (kv heads already repeated to H). Causal."""
+    B, S, H, D = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    out = flash_attention_pallas(qf, kf, vf, scale=scale, window=window, interpret=INTERPRET)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def ssm_scan(a, b, h0):
+    """Linear recurrence for [B, T, ...] a/b with state [B, ...]: any trailing
+    dims are folded into channels."""
+    B, T = a.shape[:2]
+    trail = a.shape[2:]
+    C = 1
+    for d in trail:
+        C *= d
+    hs, h_last = ssm_scan_pallas(a.reshape(B, T, C), b.reshape(B, T, C), h0.reshape(B, C),
+                                 interpret=INTERPRET)
+    return hs.reshape((B, T) + trail), h_last.reshape((B,) + trail)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_REFINE = 16
+NEG_INF = -2.0e38
+
+
+def topk_sparsify_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Same threshold-refinement algorithm as the kernel, in pure jnp."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    hi = jnp.max(mag, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def refine(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=-1, keepdims=True)
+        return jnp.where(count > k, mid, lo), jnp.where(count > k, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, N_REFINE, refine, (lo, hi))
+    return jnp.where(mag >= lo, x, 0).astype(x.dtype)
+
+
+def topk_exact_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact top-k (jax.lax.top_k) — property-test target for the kernel."""
+    mag = jnp.abs(x)
+    thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+    return jnp.where(mag >= thresh, x, 0).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, scale=None, window: int = 0):
+    """Naive attention: q,k,v [BH, S, D] causal (+ optional sliding window)."""
+    BH, S, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    ok = pos[None, :] <= pos[:, None]
+    if window > 0:
+        ok &= pos[None, :] > (pos[:, None] - window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(a, b, h0):
+    """Sequential linear recurrence h_t = a_t*h_{t-1} + b_t; a,b [B,T,C]."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    bT = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    h_last, hs = jax.lax.scan(step, h0.astype(jnp.float32), (aT, bT))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), h_last.astype(h0.dtype)

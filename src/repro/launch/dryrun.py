@@ -1,0 +1,217 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh) lowers
+and compiles, and extract the roofline terms from the compiled artifacts.
+
+For training shapes, three programs are lowered (train_step / exchange /
+global_agg) whose costs combine as the paper's C(P,Q):
+    per-step = train_step + (1/Q)·exchange + (1/P)·global_agg.
+Inference shapes lower a single serve_step.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.common.config import INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import LONG_CTX_OK, build_programs, build_shardings
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(f64|f32|s64|u64|s32|u32|bf16|f16|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        els = 1
+        for d in dims.split(","):
+            if d:
+                els *= int(d)
+        total += els * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind (result-shape proxy),
+    parsed from the post-SPMD optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def analyze_compiled(lowered, compiled) -> Dict:
+    ca = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    coll_total = float(sum(coll.values()))
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": coll_total,
+        "collectives": coll,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False, mesh=None,
+            verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and arch not in LONG_CTX_OK:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full attention is quadratic at 500k (DESIGN §4)"}
+    if shape.kind == "decode" and cfg.is_encoder_decoder and shape_name == "long_500k":
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "enc-dec 500k decode N/A"}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "n_chips": n_chips, "status": "ok", "programs": {},
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    progs = build_programs(cfg, shape, multi_pod=multi_pod)
+    for name, (fn, sds, axes) in progs.entries.items():
+        t0 = time.time()
+        shardings = tuple(build_shardings(s, a, mesh) for s, a in zip(sds, axes))
+        if name == "serve_step" and "caches" in sds[1]:
+            donate = (1,)  # decode caches update in place
+        elif name == "train_step":
+            donate = (0,)  # params -> new params alias (no double buffering)
+        else:
+            donate = ()
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fn, in_shardings=shardings, donate_argnums=donate).lower(*sds)
+            compiled = lowered.compile()
+            stats = analyze_compiled(lowered, compiled)
+        # loop-aware analytic flops (cost_analysis drops nested-scan trip
+        # counts — see launch/flops.py); per-device = global / chips
+        from repro.launch.flops import traced_flops
+
+        stats["traced_flops_per_device"] = traced_flops(fn, *sds) / n_chips
+        stats["compute_s"] = stats["traced_flops_per_device"] / PEAK_FLOPS
+        stats["lower_compile_s"] = round(time.time() - t0, 1)
+        result["programs"][name] = stats
+        if verbose:
+            print(
+                f"  {name:12s} flops/dev={stats['flops_per_device']:.3e} "
+                f"bytes/dev={stats['bytes_per_device']:.3e} "
+                f"coll/dev={stats['collective_bytes_per_device']:.3e} "
+                f"temp={stats['temp_bytes']/1e9:.1f}GB "
+                f"({stats['lower_compile_s']}s)"
+            )
+    return result
+
+
+def roofline_summary(result: Dict, P: int = 8, Q: int = 4,
+                     tokens_per_step: int | None = None) -> Dict:
+    """Combine program terms with the paper's 1/P, 1/Q amortization."""
+    if result.get("status") != "ok":
+        return {}
+    progs = result["programs"]
+    if "train_step" in progs:
+        terms = {}
+        for key in ("compute_s", "memory_s", "collective_s"):
+            terms[key] = (
+                progs["train_step"][key]
+                + progs["exchange"][key] / Q
+                + progs["global_agg"][key] / P
+            )
+    else:
+        terms = {k: progs["serve_step"][k] for k in ("compute_s", "memory_s", "collective_s")}
+    dominant = max(terms, key=terms.get)
+    out = dict(terms)
+    out["dominant"] = dominant.replace("_s", "")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        tag = "multipod" if mp else "pod"
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}__{shape}__{tag}"
+                path = os.path.join(args.out, key + ".json")
+                if os.path.exists(path):
+                    print(f"[skip cached] {key}")
+                    continue
+                print(f"[dry-run] {key}")
+                try:
+                    res = run_one(arch, shape, multi_pod=mp, mesh=mesh)
+                    res["roofline"] = roofline_summary(res)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "status": "error", "error": str(e)[-2000:]}
+                    failures.append(key)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+In the HSGD mapping (DESIGN §2): "pod" carries the hospital-patient groups
+(tier-3 horizontal — aggregated every P steps), "data" carries batch/FSDP
+within a group (tier-1 — the intra-group device aggregation), and "model"
+carries the vertical partition + tensor parallelism (tier-2 — the ζ exchange
+every Q steps).
+
+Defined as functions, never module-level constants: importing this module
+must not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
+    """Small mesh for CI-sized dry-run tests (requires >= n devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,357 @@
+"""Step builders + input specs for every (architecture × input shape).
+
+Three lowered programs per training shape (their roofline terms combine as
+  cost/step = train_step + (1/Q)·exchange_step + (1/P)·global_agg
+— exactly the paper's C(P,Q) decomposition):
+
+  * ``hsgd_train_step``  — one HSGD iteration (eqs. 5–7): hospital update with
+    fresh ζ1/stale ζ2, device update with stale θ0/ζ1. Runs every step, no
+    cross-tier communication beyond the within-group batch reduce.
+  * ``exchange_step``    — recompute + exchange ζ1, ζ2 and snapshot θ0
+    (fired every Q steps; optionally top-k compressed).
+  * ``global_agg``       — eq. (2) across groups (pods), fired every P steps.
+
+Inference shapes lower the plain architecture (federation is a training
+construct): ``prefill_step`` and ``decode_step``.
+
+TPU adaptation of tier-1 (documented in DESIGN §2): the within-group device
+aggregation (eq. 1) is realized by the batch-mean over the data axis that the
+gradient computation already performs — on a pod this reduction is the
+standard within-replica gradient sync, so Q amortizes the *vertical exchange*
+while P amortizes the *cross-pod model sync*.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import InputShape, ModelConfig
+from repro.common.sharding import DEFAULT_RULES, divisible_spec, logical_to_spec
+from repro.core.compression import compress_message
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.split_model import HybridModel, llm_hybrid
+
+VIS_PATCHES = 1024  # stubbed vision patches prepended for the VLM arch
+
+# long_500k needs sub-quadratic attention: run only where that holds.
+LONG_CTX_OK = {"gemma3-1b", "gemma3-4b", "zamba2-2.7b", "falcon-mamba-7b"}
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def build_shardings(shapes_tree, axes_tree, mesh: Mesh, rules=None):
+    """ShapeDtypeStruct tree + logical-axes tree -> NamedSharding tree."""
+    rules = rules or DEFAULT_RULES
+
+    def one(sds, axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        spec = logical_to_spec(axes, rules, mesh)
+        spec = divisible_spec(sds.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, shapes_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+
+def hybrid_train_inputs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStructs + logical axes for the HSGD training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    tok_axes = ("batch", "seq")
+    emb_axes = ("batch", "seq", None)
+    if cfg.family == "vlm":
+        pv = VIS_PATCHES
+        sds = {
+            "x1": jax.ShapeDtypeStruct((B, pv, cfg.d_model), dt),
+            "x2": jax.ShapeDtypeStruct((B, S - pv), jnp.int32),
+            "y": jax.ShapeDtypeStruct((B, S - pv), jnp.int32),
+        }
+        axes = {"x1": emb_axes, "x2": tok_axes, "y": tok_axes}
+    elif cfg.family == "audio":
+        sds = {
+            "x1": jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt),
+            "x2": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "y": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        axes = {"x1": emb_axes, "x2": tok_axes, "y": tok_axes}
+    else:
+        s1 = S // 2
+        sds = {
+            "x1": jax.ShapeDtypeStruct((B, s1), jnp.int32),
+            "x2": jax.ShapeDtypeStruct((B, S - s1), jnp.int32),
+            "y": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        axes = {"x1": tok_axes, "x2": tok_axes, "y": tok_axes}
+    return sds, axes
+
+
+def hybrid_stale_inputs(model: HybridModel, cfg: ModelConfig, batch_sds):
+    """Shapes of the stale exchange context (ζ1, ζ2, θ0 snapshot)."""
+    dt = _dtype(cfg)
+    t1 = L.abstract_params(model.specs1, dt)
+    t2 = L.abstract_params(model.specs2, dt)
+    z1 = jax.eval_shape(model.h1, t1, batch_sds["x1"])
+    z2 = jax.eval_shape(model.h2, t2, batch_sds["x2"])
+    t0 = L.abstract_params(model.specs0, dt)
+    sds = {"theta0": t0, "z1": z1, "z2": z2}
+    axes = {
+        "theta0": L.axes_tree(model.specs0),
+        "z1": ("batch", "seq", None),
+        "z2": ("batch", "seq", None),
+    }
+    return sds, axes
+
+
+def inference_inputs(cfg: ModelConfig, shape: InputShape, force_window: bool):
+    """(prefill | decode) inputs for the plain architecture."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = _dtype(cfg)
+    if shape.kind == "prefill":
+        sds: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+        if cfg.family == "vlm":
+            sds["tokens"] = jax.ShapeDtypeStruct((B, S - VIS_PATCHES), jnp.int32)
+            sds["extra_embeds"] = jax.ShapeDtypeStruct((B, VIS_PATCHES, cfg.d_model), dt)
+            axes["extra_embeds"] = ("batch", "seq", None)
+        elif cfg.family == "audio":
+            sds["extra_embeds"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+            axes["extra_embeds"] = ("batch", "seq", None)
+        return sds, axes
+    # decode: one token + caches
+    cache_len = S
+    if force_window and cfg.sliding_window:
+        cache_len = min(S, cfg.sliding_window)
+    cache_sds, cache_axes = T.make_decode_caches(cfg, B, cache_len, dt)
+    sds = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32), "caches": cache_sds}
+    axes = {"tokens": ("batch", None), "caches": cache_axes}
+    return sds, axes
+
+
+# ---------------------------------------------------------------------------
+# HSGD step builders (training shapes)
+# ---------------------------------------------------------------------------
+
+
+def make_hybrid(cfg: ModelConfig, n_tower: int = 2, remat: bool = True) -> HybridModel:
+    return llm_hybrid(cfg, n_tower=n_tower, remat=remat)
+
+
+def make_hsgd_train_step(model: HybridModel, lr: float = 1e-3) -> Callable:
+    def step(params, stale, batch):
+        def hosp_loss(t0, t1):
+            z1 = model.h1(t1, batch["x1"])
+            return model.loss(t0, z1, jax.lax.stop_gradient(stale["z2"]), batch["y"])
+
+        loss, (g0, g1) = jax.value_and_grad(hosp_loss, argnums=(0, 1))(
+            params["theta0"], params["theta1"]
+        )
+
+        def dev_loss(t2):
+            z2 = model.h2(t2, batch["x2"])
+            return model.loss(
+                jax.lax.stop_gradient(stale["theta0"]),
+                jax.lax.stop_gradient(stale["z1"]),
+                z2,
+                batch["y"],
+            )
+
+        g2 = jax.grad(dev_loss)(params["theta2"])
+        upd = lambda p, g: p - lr * g.astype(p.dtype)
+        new = {
+            "theta0": jax.tree.map(upd, params["theta0"], g0),
+            "theta1": jax.tree.map(upd, params["theta1"], g1),
+            "theta2": jax.tree.map(upd, params["theta2"], g2),
+        }
+        return new, loss
+
+    return step
+
+
+def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: int = 0) -> Callable:
+    def exchange(params, batch):
+        z1 = model.h1(params["theta1"], batch["x1"])
+        z2 = model.h2(params["theta2"], batch["x2"])
+        if compression_k or quant:
+            z1 = compress_message(z1, compression_k or 1.0, quant)
+            z2 = compress_message(z2, compression_k or 1.0, quant)
+        return {"theta0": params["theta0"], "z1": z1, "z2": z2}
+
+    return exchange
+
+
+def make_global_agg() -> Callable:
+    """Eq. (2) over the leading group (pod) dim: mean + broadcast back."""
+
+    def agg(params):
+        def m(x):
+            g = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True).astype(x.dtype)
+            return jnp.broadcast_to(g, x.shape)
+
+        return jax.tree.map(m, params)
+
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Plain (non-federated) steps
+# ---------------------------------------------------------------------------
+
+
+def make_plain_train_step(cfg: ModelConfig, lr: float = 1e-3, force_window=False) -> Callable:
+    """Baseline sync-DP training step (beyond-paper comparison point)."""
+
+    def step(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.lm_loss(cfg, p, batch, remat=True, force_window=force_window)
+        )(params)
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def step(params, batch):
+        hidden, _ = T.forward(
+            cfg, params, batch["tokens"], extra_embeds=batch.get("extra_embeds"), remat=True
+        )
+        logits = T.logits_from_hidden(cfg, params, hidden[:, -1:])
+        return logits
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, force_window: bool = False) -> Callable:
+    from repro.common.sharding import weight_mode
+
+    def step(params, batch):
+        index = jnp.asarray(batch_index_default(batch), jnp.int32)
+        with weight_mode("fsdp"):  # decode: weights stay sharded (§Perf it. 2)
+            logits, new_caches = T.decode_step(
+                cfg, params, batch["tokens"], batch["caches"], index, force_window=force_window
+            )
+        return logits, new_caches
+
+    return step
+
+
+def batch_index_default(batch):
+    """Decode write position: mid-cache (static for the dry-run)."""
+    caches = batch["caches"]
+    leaves = jax.tree_util.tree_leaves(caches)
+    # cache length lives on axis 2 of stacked kv ([L, B, S, ...]) or ssm state
+    for leaf in leaves:
+        if leaf.ndim >= 3:
+            return leaf.shape[2] // 2
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Assembled program set per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Programs:
+    """Callables + (input SDS, axes) per lowered program."""
+
+    entries: Dict[str, Tuple[Callable, Tuple, Tuple]]  # name -> (fn, sds, axes)
+
+
+def build_programs(cfg: ModelConfig, shape: InputShape, *, n_tower: int = 2,
+                   multi_pod: bool = False) -> Programs:
+    dt = _dtype(cfg)
+    entries: Dict[str, Tuple[Callable, Tuple, Tuple]] = {}
+    force_window = shape.name == "long_500k"
+
+    if shape.kind == "train":
+        model = make_hybrid(cfg, n_tower=n_tower)
+        p_sds = {k: L.abstract_params(s, dt) for k, s in model.specs().items()}
+        p_axes = {k: L.axes_tree(s) for k, s in model.specs().items()}
+        b_sds, b_axes = hybrid_train_inputs(cfg, shape)
+        if multi_pod:
+            # per-group (per-pod) batch: global batch split across G groups
+            b_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((s.shape[0] // 2,) + s.shape[1:], s.dtype),
+                b_sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+        s_sds, s_axes = hybrid_stale_inputs(model, cfg, b_sds)
+
+        step = make_hsgd_train_step(model)
+        exch = make_exchange_step(model)
+        agg = make_global_agg()
+
+        if multi_pod:
+            G = 2
+
+            def stack(tree, axes_tree_, lead):
+                sds = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((G,) + s.shape, s.dtype), tree,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+                )
+                axes = jax.tree.map(
+                    lambda a: (lead,) + tuple(a), axes_tree_,
+                    is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a),
+                )
+                return sds, axes
+
+            p_sds, p_axes = stack(p_sds, p_axes, "pod_group")
+            s_sds, s_axes = stack(s_sds, s_axes, "pod_group")
+            b_sds, b_axes = stack(b_sds, b_axes, "pod_group")  # already per-group batch
+            entries["train_step"] = (jax.vmap(step), (p_sds, s_sds, b_sds), (p_axes, s_axes, b_axes))
+            entries["exchange"] = (jax.vmap(exch), (p_sds, b_sds), (p_axes, b_axes))
+            entries["global_agg"] = (agg, (p_sds,), (p_axes,))
+        else:
+            entries["train_step"] = (step, (p_sds, s_sds, b_sds), (p_axes, s_axes, b_axes))
+            entries["exchange"] = (exch, (p_sds, b_sds), (p_axes, b_axes))
+            # single-pod global agg: degenerate (one group) — still lowered for
+            # completeness with a leading dim of 1
+            g_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((1,) + s.shape, s.dtype), p_sds,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+            )
+            g_axes = jax.tree.map(
+                lambda a: (None,) + tuple(a), p_axes,
+                is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a),
+            )
+            entries["global_agg"] = (agg, (g_sds,), (g_axes,))
+        return Programs(entries)
+
+    # inference shapes: plain architecture
+    p_sds = L.abstract_params(T.model_specs(cfg), dt)
+    p_axes = L.axes_tree(T.model_specs(cfg))
+    b_sds, b_axes = inference_inputs(cfg, shape, force_window)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+    else:
+        fn = make_decode_step(cfg, force_window)
+    if multi_pod:
+        # inference scale-out across pods: batch sharded over pod too
+        b_axes = jax.tree.map(
+            lambda a: tuple(("pod_batch" if x == "batch" else x) for x in a), b_axes,
+            is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a),
+        )
+    entries["serve_step"] = (fn, (p_sds, b_sds), (p_axes, b_axes))
+    return Programs(entries)

@@ -1,0 +1,84 @@
+"""The paper's CNN model (Fig. 10): hospital-side + device-side conv towers
+(no FC) whose outputs (intermediate results ζ) feed a combined model.
+
+Used for the OrganAMNIST reproduction: each 28x28 image is vertically split
+by rows; the hospital holds the top ``h_rows`` rows (≈300 px), the device the
+rest (≈484 px).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def conv_specs(k: int, c_in: int, c_out: int, name_scale=None) -> Dict[str, L.Spec]:
+    return {
+        "w": L.Spec((k, k, c_in, c_out), (None, None, None, None), "normal", name_scale),
+        "b": L.Spec((c_out,), (None,), "zeros"),
+    }
+
+
+def conv2d(params, x, stride: int = 1):
+    y = jax.lax.conv_general_dilated(
+        x,
+        params["w"].astype(x.dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + params["b"].astype(x.dtype)
+
+
+def tower_specs(in_rows: int, width: int = 28, channels: Tuple[int, ...] = (16, 32), embed_dim: int = 64):
+    s: Dict = {}
+    c_prev = 1
+    for i, c in enumerate(channels):
+        s[f"conv{i}"] = conv_specs(3, c_prev, c)
+        c_prev = c
+    rows, cols = in_rows, width
+    for _ in channels:
+        rows, cols = max(1, rows // 2), max(1, cols // 2)
+    s["proj"] = L.dense_specs(rows * cols * c_prev, embed_dim, (None, None))
+    return s
+
+
+def tower_forward(params, x_flat, in_rows: int, width: int = 28, n_conv: int = 2):
+    """x_flat: [B, in_rows*width] pixel slice -> ζ [B, embed]."""
+    B = x_flat.shape[0]
+    x = x_flat.reshape(B, in_rows, width, 1)
+    for i in range(n_conv):
+        x = jax.nn.relu(conv2d(params[f"conv{i}"], x))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    x = x.reshape(B, -1)
+    return L.dense(params["proj"], x)
+
+
+def combined_specs(embed_dim: int, n_classes: int, hidden: int = 128):
+    return {
+        "fc1": L.dense_specs(2 * embed_dim, hidden, (None, None)),
+        "fc1_b": L.Spec((hidden,), (None,), "zeros"),
+        "fc2": L.dense_specs(hidden, n_classes, (None, None)),
+        "fc2_b": L.Spec((n_classes,), (None,), "zeros"),
+    }
+
+
+def combined_forward(params, z1, z2):
+    x = jnp.concatenate([z1, z2], axis=-1)
+    x = jax.nn.relu(L.dense(params["fc1"], x) + params["fc1_b"].astype(x.dtype))
+    return L.dense(params["fc2"], x) + params["fc2_b"].astype(x.dtype)
+
+
+def classification_loss(logits, labels, weight_decay: float = 0.0, params=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    loss = -jnp.mean(ll)
+    if weight_decay and params is not None:
+        sq = sum(jnp.sum(jnp.square(p)) for p in jax.tree_util.tree_leaves(params))
+        loss = loss + 0.5 * weight_decay * sq
+    return loss

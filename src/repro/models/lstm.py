@@ -1,0 +1,54 @@
+"""The paper's LSTM model for MIMIC-III / ESR: hospital & device LSTM towers
+over their vertical feature slices; final hidden states are the intermediate
+results ζ consumed by the combined classifier.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def lstm_specs(d_in: int, d_hidden: int) -> Dict[str, L.Spec]:
+    # gates: i, f, g, o stacked
+    return {
+        "wx": L.Spec((d_in, 4 * d_hidden), (None, None)),
+        "wh": L.Spec((d_hidden, 4 * d_hidden), (None, None)),
+        "b": L.Spec((4 * d_hidden,), (None,), "zeros"),
+    }
+
+
+def lstm_forward(params, x):
+    """x: [B, T, F] -> last hidden state [B, H]."""
+    B = x.shape[0]
+    H = params["wh"].shape[0]
+    xg = jnp.einsum("btf,fk->btk", x, params["wx"].astype(x.dtype)) + params["b"].astype(x.dtype)
+    xg = jnp.moveaxis(xg, 1, 0)  # [T, B, 4H]
+
+    def step(carry, g_x):
+        h, c = carry
+        gates = g_x + jnp.einsum("bh,hk->bk", h, params["wh"].astype(h.dtype))
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((B, H), x.dtype)
+    (h, _), _ = jax.lax.scan(step, (h0, h0), xg)
+    return h
+
+
+def tower_specs(d_in: int, d_hidden: int = 64, embed_dim: int = 64) -> Dict:
+    return {
+        "lstm": lstm_specs(d_in, d_hidden),
+        "proj": L.dense_specs(d_hidden, embed_dim, (None, None)),
+    }
+
+
+def tower_forward(params, x):
+    """x: [B, T, F_slice] -> ζ [B, embed]."""
+    h = lstm_forward(params["lstm"], x)
+    return L.dense(params["proj"], h)

@@ -1,0 +1,50 @@
+"""Feed-forward variants: SwiGLU / GeGLU (gated), squared-ReLU, plain GELU."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import constrain, use_weight
+from repro.models import layers as L
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, L.Spec]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": L.Spec((d, f), ("embed", "mlp")),
+            "w_up": L.Spec((d, f), ("embed", "mlp")),
+            "w_down": L.Spec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "w_up": L.Spec((d, f), ("embed", "mlp")),
+        "w_down": L.Spec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_forward(params, x, cfg: ModelConfig):
+    if cfg.mlp == "swiglu":
+        act = L.ACTIVATIONS["silu"]
+    elif cfg.mlp == "geglu":
+        act = L.ACTIVATIONS["gelu"]
+    elif cfg.mlp == "squared_relu":
+        act = L.squared_relu
+    else:
+        act = L.ACTIVATIONS["gelu"]
+
+    if cfg.mlp in ("swiglu", "geglu"):
+        wg = use_weight(params["w_gate"], ("embed", "mlp"))
+        wu = use_weight(params["w_up"], ("embed", "mlp"))
+        g = jnp.einsum("...d,df->...f", x, wg.astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, wu.astype(x.dtype))
+        h = act(g) * u
+    else:
+        wu = use_weight(params["w_up"], ("embed", "mlp"))
+        h = act(jnp.einsum("...d,df->...f", x, wu.astype(x.dtype)))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    wd = use_weight(params["w_down"], ("mlp", "embed"))
+    out = jnp.einsum("...f,fd->...d", h, wd.astype(x.dtype))
+    return constrain(out, ("batch", "seq", "embed"))

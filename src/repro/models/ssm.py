@@ -1,0 +1,289 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training/prefill uses a chunked linear recurrence: within a chunk the
+recurrence h_t = a_t * h_{t-1} + b_t is solved with cumulative products
+(associative-scan identity), and chunk boundary states are carried with
+``lax.scan``. This keeps activation memory O(T/chunks * state) and is the
+pure-JAX twin of kernels/ssm_scan.py. Decode is a single recurrence step on a
+carried state — O(1) per token, which is what makes long_500k tractable for
+the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.common.sharding import constrain, use_weight
+from repro.models import layers as L
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, L.Spec]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    conv = cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        dt_rank = max(1, d // 16)
+        return {
+            "w_in": L.Spec((d, 2 * d_in), ("embed", "ssm_inner")),
+            "conv_w": L.Spec((conv, d_in), ("conv", "ssm_inner"), "normal", 0.5),
+            "conv_b": L.Spec((d_in,), ("ssm_inner",), "zeros"),
+            "w_bcdt": L.Spec((d_in, 2 * N + dt_rank), ("ssm_inner", None)),
+            "w_dt": L.Spec((dt_rank, d_in), (None, "ssm_inner"), "normal", 0.1),
+            "dt_bias": L.Spec((d_in,), ("ssm_inner",), "zeros"),
+            "a_log": L.Spec((d_in, N), ("ssm_inner", "ssm_state"), "zeros"),
+            "d_skip": L.Spec((d_in,), ("ssm_inner",), "ones"),
+            "w_out": L.Spec((d_in, d), ("ssm_inner", "embed")),
+        }
+    # mamba2 (SSD): scalar decay per head
+    H = d_in // cfg.ssm_headdim
+    return {
+        "w_in": L.Spec((d, 2 * d_in + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": L.Spec((conv, d_in + 2 * N), ("conv", "ssm_inner"), "normal", 0.5),
+        "conv_b": L.Spec((d_in + 2 * N,), ("ssm_inner",), "zeros"),
+        "dt_bias": L.Spec((H,), (None,), "zeros"),
+        "a_log": L.Spec((H,), (None,), "zeros"),
+        "d_skip": L.Spec((H,), (None,), "ones"),
+        "norm": L.Spec((d_in,), ("ssm_inner",), "ones"),
+        "w_out": L.Spec((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Decode-time carried state (per layer): (conv_buffer, ssm_state)."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    conv = cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        shapes = (
+            jax.ShapeDtypeStruct((batch, conv - 1, d_in), dtype),
+            jax.ShapeDtypeStruct((batch, d_in, N), dtype),
+        )
+        axes = (("batch", None, "ssm_inner"), ("batch", "ssm_inner", "ssm_state"))
+    else:
+        H = d_in // cfg.ssm_headdim
+        shapes = (
+            jax.ShapeDtypeStruct((batch, conv - 1, d_in + 2 * N), dtype),
+            jax.ShapeDtypeStruct((batch, H, cfg.ssm_headdim, N), dtype),
+        )
+        axes = (("batch", None, "ssm_inner"), ("batch", None, None, "ssm_state"))
+    return shapes, axes
+
+
+# ---------------------------------------------------------------------------
+# Chunked linear recurrence: h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+
+def chunked_linear_recurrence(a, b, h0, project=None, aux=None):
+    """a, b: [B, T, ...]; h0: [B, ...]. Returns (outputs over T, final state).
+
+    Within a chunk: h_t = (prod_{i<=t} a_i) * (h0 + sum_{j<=t} b_j / prod_{i<=j} a_i)
+    computed stably in log-space for a (a > 0 guaranteed: a = exp(-softplus)).
+
+    ``project(hs_chunk, aux_chunk)`` (optional) is fused into each chunk so the
+    state history [B, T, C, N] is never materialized — only the projected
+    output [B, T, C] leaves the scan. Without it, returns the raw states.
+    """
+    B, T = a.shape[0], a.shape[1]
+    nchunk = (T + CHUNK - 1) // CHUNK
+    pad = nchunk * CHUNK - T
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
+        if aux is not None:
+            aux = jnp.pad(aux, ((0, 0), (0, pad)) + ((0, 0),) * (aux.ndim - 2))
+    a = a.reshape((B, nchunk, CHUNK) + a.shape[2:])
+    b = b.reshape((B, nchunk, CHUNK) + b.shape[2:])
+    a = jnp.moveaxis(a, 1, 0)  # [nchunk, B, CHUNK, ...]
+    b = jnp.moveaxis(b, 1, 0)
+    if aux is not None:
+        aux = jnp.moveaxis(aux.reshape((B, nchunk, CHUNK) + aux.shape[2:]), 1, 0)
+
+    def chunk_step(h, xs):
+        hs, h_last = _chunk_recurrence(xs[0], xs[1], h)
+        out = project(hs, xs[2]) if project is not None else hs
+        return h_last, out
+
+    xs = (a, b) if aux is None else (a, b, aux)
+    body = chunk_step if aux is not None else (lambda h, ab: chunk_step(h, ab))
+    h_final, outs = jax.lax.scan(body, h0, xs)
+    outs = jnp.moveaxis(outs, 0, 1)
+    outs = outs.reshape((B, nchunk * CHUNK) + outs.shape[3:])
+    return outs[:, :T], h_final
+
+
+
+def _chunk_recurrence(ac, bc, h):
+    """Solve h_t = a_t*h_{t-1} + b_t within one chunk. ac,bc: [B,K,...].
+
+    Exact sequential scan: the log-space cumulative-product shortcut
+    overflows exp(-cum) for strong decay (a << 1), so the pure-JAX path
+    stays exact and the in-register sequential Pallas kernel
+    (kernels/ssm_scan.py) — which has the same recurrence structure — is
+    the performance path on hardware.
+    """
+    aT = jnp.moveaxis(ac, 1, 0)
+    bT = jnp.moveaxis(bc, 1, 0)
+
+    def step(hc, ab):
+        at, bt = ab
+        hc = at * hc + bt
+        return hc, hc
+
+    h_last, hs = jax.lax.scan(step, h, (aT, bT))
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def _to_chunks(x, nchunk, pad):
+    """[B, T, ...] -> [nchunk, B, K, ...] (pad with zeros)."""
+    B = x.shape[0]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    x = x.reshape((B, nchunk, CHUNK) + x.shape[2:])
+    return jnp.moveaxis(x, 1, 0)
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray] = None):
+    """x: [B, T, C]; w: [K, C] depthwise; state: [B, K-1, C] carried context."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros_like(x[:, :0])
+    return out + b.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 forward
+# ---------------------------------------------------------------------------
+
+
+def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
+    """x: [B, T, D]. state: (conv_state, h) for decode; None for train/prefill."""
+    B, T, D = x.shape
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    dt_rank = max(1, D // 16)
+
+    w_in = use_weight(params["w_in"], ("embed", "ssm_inner"))
+    proj = jnp.einsum("btd,dk->btk", x, w_in.astype(x.dtype))
+    xz, z = proj[..., :d_in], proj[..., d_in:]
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xz, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    xc = constrain(xc, ("batch", "seq", "ssm_inner"))
+
+    bcdt = jnp.einsum("btc,ck->btk", xc, params["w_bcdt"].astype(x.dtype))
+    Bm, Cm, dt_in = bcdt[..., :N], bcdt[..., N : 2 * N], bcdt[..., 2 * N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", dt_in, params["w_dt"].astype(x.dtype))
+        + params["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)  # [B, T, d_in]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [d_in, N]
+    h0 = state[1].astype(jnp.float32) if state is not None else jnp.zeros((B, d_in, N), jnp.float32)
+
+    # chunked scan with a/bx construction fused INSIDE the chunk: the state
+    # history [B, T, d_in, N] never exists — only [B, CHUNK, d_in, N] does.
+    nchunk = (T + CHUNK - 1) // CHUNK
+    pad = nchunk * CHUNK - T
+    xcf = xc.astype(jnp.float32)
+
+    def chunk_body(h, xs):
+        dtc, xcc, Bc, Cc = xs  # [B,K,d_in] [B,K,d_in] [B,K,N] [B,K,N]
+        ac = jnp.exp(dtc[..., None] * A[None, None])
+        bxc = (dtc * xcc)[..., None] * Bc[:, :, None, :]
+        hs, hl = _chunk_recurrence(ac, bxc, h)
+        yc = jnp.einsum("bkcn,bkn->bkc", hs, Cc)
+        return hl, yc
+
+    xs = tuple(_to_chunks(v, nchunk, pad) for v in
+               (dt, xcf, Bm.astype(jnp.float32), Cm.astype(jnp.float32)))
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * CHUNK, d_in)[:, :T]
+    y = y + params["d_skip"].astype(jnp.float32) * xcf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    w_out = use_weight(params["w_out"], ("ssm_inner", "embed"))
+    out = jnp.einsum("btc,cd->btd", y, w_out.astype(x.dtype))
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_state = (new_conv, h_final) if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) forward — scalar decay per head
+# ---------------------------------------------------------------------------
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
+    B, T, D = x.shape
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state
+    P = cfg.ssm_headdim
+    H = d_in // P
+
+    w_in = use_weight(params["w_in"], ("embed", "ssm_inner"))
+    proj = jnp.einsum("btd,dk->btk", x, w_in.astype(x.dtype))
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * N]
+    dt_in = proj[..., 2 * d_in + 2 * N :]  # [B, T, H]
+    conv_state = state[0] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., :d_in].reshape(B, T, H, P)
+    Bm = xBC[..., d_in : d_in + N]
+    Cm = xBC[..., d_in + N :]
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # [B,T,H]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H]
+    h0 = (
+        state[1].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+    nchunk = (T + CHUNK - 1) // CHUNK
+    pad = nchunk * CHUNK - T
+    xsf = xs.astype(jnp.float32)
+
+    def chunk_body(h, cs):
+        dtc, xcc, Bc, Cc = cs  # [B,K,H] [B,K,H,P] [B,K,N] [B,K,N]
+        ac = jnp.broadcast_to(
+            jnp.exp(dtc * A[None, None])[..., None, None],
+            dtc.shape + (P, N),
+        )
+        bxc = dtc[..., None, None] * xcc[..., None] * Bc[:, :, None, None, :]
+        hs, hl = _chunk_recurrence(ac, bxc, h)
+        yc = jnp.einsum("bkhpn,bkn->bkhp", hs, Cc)
+        return hl, yc
+
+    cs = tuple(_to_chunks(v, nchunk, pad) for v in
+               (dt, xsf, Bm.astype(jnp.float32), Cm.astype(jnp.float32)))
+    h_final, ys = jax.lax.scan(chunk_body, h0, cs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * CHUNK, H, P)[:, :T]
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xsf
+    y = y.reshape(B, T, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rmsnorm({"scale": params["norm"]}, y.astype(x.dtype))
+    w_out = use_weight(params["w_out"], ("ssm_inner", "embed"))
+    out = jnp.einsum("btc,cd->btd", y, w_out.astype(x.dtype))
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_state = (new_conv, h_final) if state is not None else None
+    return out, new_state
+
+
+def mamba_forward(params, x, cfg: ModelConfig, state=None):
+    if cfg.ssm_version == 1:
+        return mamba1_forward(params, x, cfg, state)
+    return mamba2_forward(params, x, cfg, state)

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    halving_schedule,
+    make_optimizer,
+    momentum,
+    sgd,
+)

@@ -1,0 +1,82 @@
+"""Optimizers. The paper's algorithm is plain SGD (HSGD = hybrid SGD) with a
+learning rate halved every T0 iterations (§VII-A3); momentum/Adam are provided
+as beyond-paper options for the framework.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        new_state = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        new = jax.tree.map(lambda p, m: p - lr * m, params, new_state)
+        return new, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree.map(
+            lambda p, m_, v_: (p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)).astype(p.dtype),
+            params, m, v,
+        )
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum()
+    if name == "adam":
+        return adam()
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def halving_schedule(base_lr: float, halve_every: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Paper §VII-A3: initial η decays halved per T0 iterations."""
+
+    def lr(step):
+        if halve_every <= 0:
+            return jnp.asarray(base_lr, jnp.float32)
+        return base_lr * 0.5 ** jnp.floor(step / halve_every).astype(jnp.float32)
+
+    return lr

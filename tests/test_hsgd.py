@@ -1,0 +1,122 @@
+"""Algorithm-level HSGD tests: staleness semantics, intervals, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.hsgd import (
+    HSGDRunner,
+    exchange,
+    global_aggregation,
+    global_model,
+    init_state,
+    local_sgd_step,
+    make_group_weights,
+)
+from repro.data.partition import hybrid_partition
+from repro.data.synthetic import ORGANAMNIST, make_dataset
+from repro.models.split_model import cnn_hybrid
+
+
+def _mini(M=2, K=8, A_frac=0.5, q=2, p=4):
+    fed = FederationConfig(num_groups=M, devices_per_group=K, alpha=A_frac,
+                           local_interval=q, global_interval=p)
+    X, y = make_dataset(ORGANAMNIST, M * K, seed=0)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    model = cnn_hybrid(h_rows=11)
+    return model, fed, data
+
+
+def test_stale_context_frozen_within_interval():
+    """ζ and θ0-snapshot must NOT change between exchanges (Alg. 1 reuse)."""
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state = exchange(model, state, data, fed)
+    z1_before = jax.tree.map(jnp.copy, state.stale["z1"])
+    for _ in range(3):
+        state, _ = local_sgd_step(model, state, 0.05)
+    np.testing.assert_array_equal(np.asarray(state.stale["z1"]), np.asarray(z1_before))
+
+
+def test_exchange_refreshes_stale_context():
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state = exchange(model, state, data, fed)
+    for _ in range(3):
+        state, _ = local_sgd_step(model, state, 0.05)
+    z2_old = np.asarray(state.stale["z2"])
+    state = exchange(model, state, data, fed)
+    assert np.abs(np.asarray(state.stale["z2"]) - z2_old).max() > 0
+
+
+def test_local_aggregation_resets_devices_to_group_mean():
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state = exchange(model, state, data, fed)
+    for _ in range(2):
+        state, _ = local_sgd_step(model, state, 0.05)
+    group_mean = F.local_aggregate(state.theta2)
+    state2 = exchange(model, state, data, fed)
+    # all devices now equal the pre-exchange group mean (eq 1 + line 15)
+    for leaf_mean, leaf_dev in zip(jax.tree_util.tree_leaves(group_mean),
+                                   jax.tree_util.tree_leaves(state2.theta2)):
+        np.testing.assert_allclose(np.asarray(leaf_dev),
+                                   np.broadcast_to(np.asarray(leaf_mean)[:, None],
+                                                   leaf_dev.shape), rtol=1e-6)
+
+
+def test_global_aggregation_makes_groups_identical():
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state = exchange(model, state, data, fed)
+    for _ in range(2):
+        state, _ = local_sgd_step(model, state, 0.1)
+    w = make_group_weights(data)
+    state = global_aggregation(state, fed, w)
+    for leaf in jax.tree_util.tree_leaves(state.theta0):
+        np.testing.assert_allclose(np.asarray(leaf[0]), np.asarray(leaf[1]), rtol=1e-6)
+
+
+def test_hospital_and_device_updates_touch_right_parts():
+    """Eq (5)(6) update θ0,θ1 every step; eq (7) updates θ2; cross-terms frozen."""
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state = exchange(model, state, data, fed)
+    s2, _ = local_sgd_step(model, state, 0.05)
+    for part_old, part_new in ((state.theta0, s2.theta0), (state.theta1, s2.theta1),
+                               (state.theta2, s2.theta2)):
+        moved = max(jax.tree_util.tree_leaves(
+            jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), part_old, part_new)))
+        assert moved > 0
+
+
+def test_compression_changes_exchange_but_training_still_converges():
+    model, fed, data = _mini(M=2, K=16, q=1, p=2)
+    train_c = TrainConfig(learning_rate=0.05, compression_k=0.25, quantization_bits=128)
+    runner = HSGDRunner(model, fed, train_c)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    w = make_group_weights(data)
+    state, losses = runner.run(state, data, w, rounds=10)
+    assert losses[-1] < losses[0]
+
+
+def test_sampled_participants_valid_and_distinct():
+    fed = FederationConfig(num_groups=3, devices_per_group=10, alpha=0.4)
+    idx = F.sample_participants(jax.random.PRNGKey(0), fed)
+    assert idx.shape == (3, 4)
+    a = np.asarray(idx)
+    assert (a >= 0).all() and (a < 10).all()
+    for row in a:
+        assert len(set(row.tolist())) == len(row)  # without replacement
+
+
+def test_q_interval_counts():
+    """A run of R rounds yields exactly R*P loss entries (Q steps × Λ × R)."""
+    model, fed, data = _mini(q=3, p=6)
+    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.01))
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    w = make_group_weights(data)
+    state, losses = runner.run(state, data, w, rounds=4)
+    assert len(losses) == 4 * 6

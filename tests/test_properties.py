@@ -1,0 +1,220 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import FederationConfig
+from repro.core import federation as F
+from repro.core.adaptive import (
+    convergence_bound,
+    max_learning_rate,
+    strategy2_optimal_interval,
+    strategy3_learning_rate,
+)
+from repro.core.compression import compress_message, compressed_bytes, quantize, topk_sparsify
+from repro.core.comm_model import MessageSizes, comm_cost_per_iteration
+from repro.data.partition import hybrid_partition, non_iid_group_indices
+from repro.data.synthetic import ORGANAMNIST, make_dataset
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation (eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 6), st.integers(1, 5), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_global_aggregate_weighted_mean(M, K, dim):
+    rng = np.random.RandomState(M * 10 + K)
+    theta = {"w": jnp.asarray(rng.randn(M, dim, dim))}
+    w = jnp.asarray(np.abs(rng.rand(M)) + 0.1)
+    agg = F.global_aggregate(theta, w)
+    manual = np.einsum("m,mij->ij", np.asarray(w / w.sum()), np.asarray(theta["w"]))
+    np.testing.assert_allclose(np.asarray(agg["w"]), manual, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(1, 5), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_aggregation_idempotent_on_equal_models(M, A):
+    """Aggregating identical models is the identity (fixed point)."""
+    theta2 = {"w": jnp.broadcast_to(jnp.arange(4.0), (M, A, 4))}
+    agg = F.local_aggregate(theta2)
+    np.testing.assert_allclose(np.asarray(agg["w"]), np.broadcast_to(np.arange(4.0), (M, 4)))
+
+
+@given(st.integers(2, 6))
+@settings(**SETTINGS)
+def test_global_aggregate_preserves_convex_hull(M):
+    rng = np.random.RandomState(M)
+    x = rng.randn(M, 3)
+    theta = {"w": jnp.asarray(x)}
+    w = jnp.asarray(np.abs(rng.rand(M)) + 0.1)
+    agg = np.asarray(F.global_aggregate(theta, w)["w"])
+    assert (agg <= x.max(axis=0) + 1e-6).all() and (agg >= x.min(axis=0) - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(8, 200), st.floats(0.05, 0.95))
+@settings(**SETTINGS)
+def test_topk_keeps_at_least_k_and_largest(n, frac):
+    x = jnp.asarray(np.random.RandomState(n).randn(4, n), jnp.float32)
+    out = np.asarray(topk_sparsify(x, frac))
+    k = max(1, int(round(frac * n)))
+    nnz = (out != 0).sum(axis=-1)
+    assert (nnz >= np.minimum(k, n)).all()
+    # every kept value has magnitude >= every dropped value
+    for row_in, row_out in zip(np.asarray(x), out):
+        kept = np.abs(row_in[row_out != 0])
+        dropped = np.abs(row_in[row_out == 0])
+        if len(kept) and len(dropped):
+            assert kept.min() >= dropped.max() - 1e-6
+
+
+@given(st.integers(2, 10), st.sampled_from([2, 16, 128, 1024]))
+@settings(**SETTINGS)
+def test_quantize_error_bounded(rows, levels):
+    x = jnp.asarray(np.random.RandomState(rows).randn(rows, 64), jnp.float32)
+    q = np.asarray(quantize(x, levels))
+    xn = np.asarray(x)
+    step = (xn.max(-1) - xn.min(-1)) / (levels - 1)
+    err = np.abs(q - xn).max(-1)
+    assert (err <= step / 2 + 1e-5).all()
+
+
+@given(st.floats(0.05, 1.0), st.sampled_from([0, 128]))
+@settings(**SETTINGS)
+def test_compressed_bytes_never_exceeds_dense(frac, levels):
+    n = 1024
+    dense = n * 4
+    c = compressed_bytes(n, frac, levels)
+    if frac < 1.0 or levels:
+        assert c <= dense + n * 4  # values + indices bound
+    if frac <= 0.5 and levels == 128:
+        assert c < dense  # the paper's regime genuinely compresses
+
+
+@given(st.integers(4, 64))
+@settings(**SETTINGS)
+def test_compress_idempotent(n):
+    x = jnp.asarray(np.random.RandomState(n).randn(2, n), jnp.float32)
+    once = compress_message(x, 0.5, 0)
+    twice = compress_message(once, 0.5, 0)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 6), st.integers(20, 60))
+@settings(**SETTINGS)
+def test_partition_no_sample_duplication(M, per_group):
+    n = M * per_group
+    X, y = make_dataset(ORGANAMNIST, n, seed=M)
+    rng = np.random.RandomState(0)
+    groups = non_iid_group_indices(y, M, ORGANAMNIST.n_classes, 2, rng)
+    all_idx = np.concatenate(groups)
+    assert len(all_idx) == len(set(all_idx.tolist()))  # disjoint
+
+
+@given(st.integers(2, 4))
+@settings(**SETTINGS)
+def test_vertical_split_reconstructs(M):
+    """Concatenating X1 and X2 recovers every sample's full feature vector."""
+    from repro.data.synthetic import vertical_split
+
+    X, y = make_dataset(ORGANAMNIST, 40, seed=M)
+    X1, X2 = vertical_split(ORGANAMNIST, X)
+    np.testing.assert_array_equal(np.concatenate([X1, X2], axis=1), X)
+
+
+@given(st.integers(2, 4), st.integers(8, 24))
+@settings(**SETTINGS)
+def test_hybrid_partition_shapes(M, K):
+    fed = FederationConfig(num_groups=M, devices_per_group=K)
+    X, y = make_dataset(ORGANAMNIST, M * K * 2, seed=1)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=1)
+    data = fd.stacked()
+    assert data["x1"].shape[:2] == (M, K)
+    assert data["x2"].shape[:2] == (M, K)
+    assert data["x1"].shape[2] + data["x2"].shape[2] == 28 * 28
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 / strategies
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.floats(1e-4, 1e-2))
+@settings(**SETTINGS)
+def test_bound_monotone_in_P_and_Q(P, Q, eta):
+    """The convergence bound (17) is non-decreasing in P and in Q."""
+    args = dict(F0=1.0, FT=0.0, rho=2.0, delta=0.5, eta=eta, T=1000)
+    b = convergence_bound(P=P, Q=Q, **args)
+    assert convergence_bound(P=P + 1, Q=Q, **args) >= b - 1e-12
+    assert convergence_bound(P=P, Q=Q + 1, **args) >= b - 1e-12
+
+
+@given(st.floats(0.1, 10.0), st.floats(0.1, 5.0), st.floats(1e-4, 0.05), st.integers(100, 100000))
+@settings(**SETTINGS)
+def test_strategy2_interval_positive_and_scales(F0, rho, eta, T):
+    q = strategy2_optimal_interval(F0, rho, 0.5, eta, T)
+    assert q >= 1
+    q_bigger_noise = strategy2_optimal_interval(F0, rho, 5.0, eta, T)
+    assert q_bigger_noise <= q  # more gradient noise -> more frequent sync
+
+
+@given(st.integers(1, 32), st.integers(1, 32))
+@settings(**SETTINGS)
+def test_strategy3_eta_respects_theorem_cap(P, Q):
+    eta = strategy3_learning_rate(P, Q, rho=2.0, delta=0.5, grad_norm_sq=1.0)
+    assert 0 < eta <= max_learning_rate(P, 2.0) + 1e-12
+    # strategy 3(i): eta decreases with P at fixed Q
+    eta_bigger_P = strategy3_learning_rate(P + 8, Q, rho=2.0, delta=0.5, grad_norm_sq=1.0)
+    assert eta_bigger_P <= eta + 1e-12
+
+
+@given(st.integers(1, 16))
+@settings(**SETTINGS)
+def test_strategy3_eta_decreases_with_Q_at_fixed_ratio(lam):
+    """Strategy 3(ii): with P/Q fixed, bigger Q -> smaller optimal eta."""
+    e1 = strategy3_learning_rate(lam * 2, 2, rho=2.0, delta=0.5, grad_norm_sq=1.0)
+    e2 = strategy3_learning_rate(lam * 8, 8, rho=2.0, delta=0.5, grad_norm_sq=1.0)
+    assert e2 <= e1 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Communication model (Prop. 1)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 16), st.integers(1, 16))
+@settings(**SETTINGS)
+def test_comm_cost_decreases_with_intervals(P_mult, Q):
+    """C(P,Q) is non-increasing in both P and Q (eq. 19)."""
+    P = Q * P_mult
+    sizes = MessageSizes(theta0=1e4, theta1=2e4, theta2=5e3, z1=1e3, z2=1e3, n_active=4)
+    fed = lambda p, q: FederationConfig(local_interval=q, global_interval=p)
+    c = comm_cost_per_iteration(sizes, fed(P, Q))
+    assert comm_cost_per_iteration(sizes, fed(P * 2, Q)) <= c + 1e-9
+    assert comm_cost_per_iteration(sizes, fed(P * 2, Q * 2)) <= c + 1e-9
+
+
+@given(st.integers(1, 8), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_comm_cost_increases_with_lambda(Q, lam):
+    """Prop. 1: at fixed Q, cost grows with Λ = P/Q... and at fixed P,
+    splitting into more local intervals (smaller Q) costs more."""
+    sizes = MessageSizes(theta0=1e4, theta1=2e4, theta2=5e3, z1=1e3, z2=1e3, n_active=4)
+    P = Q * lam
+    c_lam = comm_cost_per_iteration(sizes, FederationConfig(local_interval=Q, global_interval=P))
+    c_eq = comm_cost_per_iteration(sizes, FederationConfig(local_interval=P, global_interval=P))
+    assert c_eq <= c_lam + 1e-9  # P=Q minimizes at fixed P (strategy 1)
