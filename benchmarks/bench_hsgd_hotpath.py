@@ -1,0 +1,194 @@
+"""HSGD hot-path benchmark: the fused/donating loop vs the pre-PR loop.
+
+Measures, on the quickstart federation with C-HSGD compression enabled
+(top-k 0.25 + b=128 quantization), three variants:
+
+  * ``pre_pr``       — the seed hot path: lax-conv towers with
+                       reduce_window max pooling (SelectAndScatter backward),
+                       leaf-wise sort-based top-k + separate quantize.
+  * ``sort_compress``— the optimized model (im2col GEMM convs, reshape-max
+                       pool) but the pre-fusion compression path; isolates
+                       the compression fusion win.
+  * ``fused``        — the full new hot path: one fused top-k+quantize
+                       row-matrix call per exchange + donated state.
+
+Reported per variant: steps/s of the full jitted training loop, µs per
+exchange event, and the compiled peak-memory estimate when the backend
+reports one. Results land in BENCH_hsgd.json so the speedup stays in the
+perf trajectory.
+
+  PYTHONPATH=src python benchmarks/bench_hsgd_hotpath.py [--rounds N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, setup_experiment
+from repro.core.hsgd import HSGDRunner, exchange, init_state, make_group_weights
+from repro.models import cnn as C
+from repro.models import layers as L
+from repro.models.split_model import HybridModel
+
+
+# ---------------------------------------------------------------------------
+# The seed (pre-PR) CNN hot path, reconstructed for an honest baseline
+# ---------------------------------------------------------------------------
+
+
+def _legacy_conv2d(params, x):
+    y = jax.lax.conv_general_dilated(
+        x, params["w"].astype(x.dtype), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["b"].astype(x.dtype)
+
+
+def _legacy_tower(params, x_flat, in_rows, width=28, n_conv=2):
+    B = x_flat.shape[0]
+    x = x_flat.reshape(B, in_rows, width, 1)
+    for i in range(n_conv):
+        x = jax.nn.relu(_legacy_conv2d(params[f"conv{i}"], x))
+        x = jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return L.dense(params["proj"], x.reshape(B, -1))
+
+
+def legacy_cnn_hybrid(h_rows=11, width=28, n_classes=11, embed_dim=64):
+    d_rows = width - h_rows
+
+    def predict(t0, z1, z2):
+        return C.combined_forward(t0, z1, z2)
+
+    return HybridModel(
+        name="paper_cnn_pre_pr",
+        specs0=C.combined_specs(embed_dim, n_classes),
+        specs1=C.tower_specs(h_rows, width, embed_dim=embed_dim),
+        specs2=C.tower_specs(d_rows, width, embed_dim=embed_dim),
+        h1=lambda t, x1: _legacy_tower(t, x1, h_rows, width),
+        h2=lambda t, x2: _legacy_tower(t, x2, d_rows, width),
+        loss=lambda t0, z1, z2, y: C.classification_loss(predict(t0, z1, z2), y),
+        predict=predict,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Timing helpers
+# ---------------------------------------------------------------------------
+
+
+def time_run(runner, state, data, w, rounds, repeats=5):
+    """Median wall time of a full jitted run (first call compiles)."""
+    times = []
+    for i in range(repeats + 1):
+        s = jax.tree.map(jnp.copy, state)  # run() donates its input
+        t0 = time.perf_counter()
+        out, losses = runner.run(s, data, w, rounds=rounds)
+        jax.block_until_ready(losses)
+        if i:  # discard the compile call
+            times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+def time_exchange(model, state, data, fed, train, fused, iters=20):
+    fn = jax.jit(lambda s: exchange(model, s, data, fed, train.compression_k,
+                                    train.quantization_bits, fused=fused))
+    state = fn(state)  # compile
+    jax.block_until_ready(state.stale["z1"])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = fn(state)
+    jax.block_until_ready(state.stale["z1"])
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def peak_memory_bytes(runner, state, data, w):
+    """Compiled temp+output size estimate; None when the backend is silent."""
+    try:
+        lowered = jax.jit(
+            lambda s, d, gw: runner._round(s, d, gw, lambda _: 0.01),
+        ).lower(state, data, w)
+        mem = lowered.compile().memory_analysis()
+        if mem is None:
+            return None
+        return int(getattr(mem, "temp_size_in_bytes", 0)
+                   + getattr(mem, "output_size_in_bytes", 0))
+    except Exception:
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..",
+                                                  "BENCH_hsgd.json"))
+    args = ap.parse_args()
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+
+    # quickstart federation + C-HSGD compression (paper: k=0.25, b=128)
+    exp = setup_experiment(dataset="organamnist", n=1024, groups=4, devices=64,
+                           alpha=0.25, q=2, p=4, lr=0.02,
+                           compression_k=0.25, quant=128)
+    fed, train, data = exp["fed"], exp["train"], exp["data"]
+    model_new = exp["model"]
+    model_pre = legacy_cnn_hybrid(h_rows=11, n_classes=exp["spec"].n_classes)
+    w = make_group_weights(data)
+    steps_per_round = fed.global_interval
+
+    variants = (
+        ("pre_pr", model_pre, False),
+        ("sort_compress", model_new, False),
+        ("fused", model_new, True),
+    )
+
+    results = {"config": {"groups": fed.num_groups, "devices": fed.devices_per_group,
+                          "alpha": fed.alpha, "Q": fed.local_interval,
+                          "P": fed.global_interval, "rounds": args.rounds,
+                          "compression_k": train.compression_k,
+                          "quantization_b": train.quantization_bits,
+                          "backend": jax.default_backend()}}
+
+    print("# HSGD hot path: fused vs pre-PR loop "
+          f"({jax.default_backend()}, {args.rounds} rounds)")
+    csv_row("variant", "steps_per_s", "exchange_us", "peak_mem_bytes")
+    for name, model, fused in variants:
+        state = init_state(jax.random.PRNGKey(0), model, fed, data)
+        runner = HSGDRunner(model, fed, train, fused_compression=fused)
+        wall, _ = time_run(runner, state, data, w, args.rounds)
+        steps_s = args.rounds * steps_per_round / wall
+        exch_us = time_exchange(model, state, data, fed, train, fused)
+        mem = peak_memory_bytes(runner, state, data, w)
+        results[name] = {"steps_per_s": round(steps_s, 2),
+                         "exchange_us": round(exch_us, 1),
+                         "peak_mem_bytes": mem,
+                         "wall_s": round(wall, 4)}
+        csv_row(name, round(steps_s, 2), round(exch_us, 1), mem)
+
+    results["speedup_steps_per_s"] = round(
+        results["fused"]["steps_per_s"] / results["pre_pr"]["steps_per_s"], 3)
+    results["speedup_exchange"] = round(
+        results["pre_pr"]["exchange_us"] / max(results["fused"]["exchange_us"], 1e-9), 3)
+    results["speedup_compression_only"] = round(
+        results["fused"]["steps_per_s"] / results["sort_compress"]["steps_per_s"], 3)
+    pre_m, fus_m = results["pre_pr"]["peak_mem_bytes"], results["fused"]["peak_mem_bytes"]
+    if pre_m and fus_m:
+        results["peak_mem_delta_bytes"] = pre_m - fus_m
+    print(f"# steps/s speedup vs pre-PR: {results['speedup_steps_per_s']:.2f}x, "
+          f"exchange: {results['speedup_exchange']:.2f}x")
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

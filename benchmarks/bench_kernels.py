@@ -33,6 +33,26 @@ def main():
     err = float(jnp.max(jnp.abs(ops.topk_sparsify(x, 0.1) - ref.topk_sparsify_ref(x, 51))))
     csv_row("topk_sparsify", "64x512", round(t_k, 1), round(t_r, 1), err)
 
+    # fused top-k + b-level quantize vs the pre-fusion two-pass sort path
+    from repro.core.compression import compress_message_sort
+
+    fused = jax.jit(lambda a: ops.fused_compress(a, 0.1, 128))
+    sortp = jax.jit(lambda a: compress_message_sort(a, 0.1, 128))
+    t_k = timeit(fused, x)
+    t_r = timeit(sortp, x)
+    err = float(jnp.max(jnp.abs(fused(x) - ref.compress_rows_ref(x, 51, 128))))
+    csv_row("fused_compress", "64x512", round(t_k, 1), round(t_r, 1), err)
+
+    # interpret-mode Pallas twin of the fused kernel (validation path),
+    # timed against the jitted fused reference it must match bit-for-bit
+    from repro.kernels.compress import fused_compress_pallas
+
+    ref_jit = jax.jit(lambda a: ref.compress_rows_ref(a, 51, 128))
+    t_k = timeit(lambda a: fused_compress_pallas(a, 51, 128, interpret=True), x)
+    t_r = timeit(ref_jit, x)
+    err = float(jnp.max(jnp.abs(fused_compress_pallas(x, 51, 128, interpret=True) - ref_jit(x))))
+    csv_row("fused_compress_pallas", "64x512", round(t_k, 1), round(t_r, 1), err)
+
     B, S, H, D = 1, 256, 4, 64
     q = jax.random.normal(key, (B, S, H, D))
     k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))

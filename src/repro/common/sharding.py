@@ -85,6 +85,29 @@ def shard_tree(tree_axes, mesh: Mesh, rules=None):
     )
 
 
+def mesh_context(mesh: Mesh):
+    """``jax.set_mesh(mesh)`` where available; older jax (< 0.5) falls back
+    to the ``Mesh`` context manager. Use for every ``with <mesh>:`` block so
+    lowering code runs across jax versions."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def group_sharding(shape, mesh: Mesh, rules=None) -> NamedSharding:
+    """NamedSharding putting a leading group axis M on the mesh's horizontal
+    axes (logical "group" rule), everything else replicated.
+
+    Used to shard HSGDState / federated data leaves ([M, ...]) so eq. (1)/(2)
+    aggregations lower to collectives. Falls back to full replication when
+    the leading dim does not divide the mesh axes (trivial-mesh path).
+    """
+    axes = ("group",) + (None,) * (max(len(shape), 1) - 1)
+    spec = logical_to_spec(axes[: len(shape)], rules, mesh)
+    spec = divisible_spec(shape, spec, mesh)
+    return NamedSharding(mesh, spec)
+
+
 def divisible_spec(shape, spec: P, mesh: Mesh) -> P:
     """Drop mesh axes from a spec wherever the dim is not divisible.
 

@@ -6,23 +6,106 @@ b = 128 -> log2(b)/32 compression of surviving values) snaps values to a
 uniform grid. Differentiable straight-through behaviour is NOT needed — the
 paper compresses *messages*, not gradients, so we compress forward values.
 
-The Pallas kernel twin lives in kernels/topk_sparsify.py; this module is the
-always-available jnp implementation (also the kernel's oracle, re-exported by
-kernels/ref.py).
+This module is the canonical *math* for the compression pipeline. Two
+implementations share it bit-for-bit:
+
+  * ``compress_rows_ref`` — the pure-jnp fused reference (also the oracle for
+    the Pallas kernel, re-exported by ``kernels/ref.py``). Ragged-aware: a
+    per-row valid length lets many pytree leaves of different widths be
+    compressed in ONE padded row-matrix call.
+  * ``kernels/compress.py::fused_compress_pallas`` — the TPU kernel twin,
+    which applies the same threshold refinement + quantization in a single
+    VMEM-resident pass (one read, one write per message row).
+
+Top-k uses the TPU-native *threshold refinement* formulation (fixed-iteration
+binary search on the magnitude threshold against the row max) rather than a
+sort: pure elementwise VPU work + row reductions, keeping >= k survivors
+(exact top-k support always preserved; ties can add a few). The legacy
+sort-based path is kept as ``topk_sparsify_sort`` for benchmarking the pre-
+fusion hot path.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import math
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+N_REFINE = 16  # threshold tight to max|x| / 2^16
+
+
+# ---------------------------------------------------------------------------
+# Canonical fused math (fp32 internally; the kernel runs the same ops)
+# ---------------------------------------------------------------------------
+
+
+def compress_rows_ref(
+    x: jnp.ndarray,
+    k: Union[int, jnp.ndarray],
+    levels: int = 0,
+    row_len: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Fused top-k sparsify + b-level quantize over the last axis of ``x``.
+
+    x: [rows, n]. k: scalar or [rows]/[rows,1] per-row keep count (k >= n is a
+    per-row no-op). levels <= 1 disables quantization. row_len: optional
+    [rows]/[rows,1] int32 valid length for ragged rows — entries at column
+    >= row_len are excluded from thresholds/extrema and zeroed in the output.
+
+    This is the jnp fallback used off-TPU and the bit-exact oracle for the
+    Pallas kernel (identical op sequence, all reductions in fp32).
+    """
+    k = jnp.asarray(k, jnp.int32).reshape(-1, 1) if not isinstance(k, int) else k
+    xf = x.astype(jnp.float32)
+    if row_len is None:
+        valid = jnp.ones(x.shape, bool)
+    else:
+        row_len = jnp.asarray(row_len, jnp.int32).reshape(-1, 1)
+        valid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) < row_len
+    mag = jnp.where(valid, jnp.abs(xf), 0.0)
+    hi = jnp.max(mag, axis=-1, keepdims=True)
+    lo = jnp.zeros_like(hi)
+
+    def refine(_, carry):
+        # invariant: count(lo) >= k > count(hi); converge on the largest
+        # threshold still keeping >= k survivors (count >= k, NOT > k — the
+        # strict form would settle one element low and keep k+1 per row)
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(((mag >= mid) & valid).astype(jnp.int32), axis=-1, keepdims=True)
+        return jnp.where(count >= k, mid, lo), jnp.where(count >= k, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, N_REFINE, refine, (lo, hi))
+    y = jnp.where(mag >= lo, xf, 0.0)  # keeps >= k entries (exactly k up to ties)
+    if levels and levels > 1:
+        qlo = jnp.min(jnp.where(valid, y, jnp.inf), axis=-1, keepdims=True)
+        qhi = jnp.max(jnp.where(valid, y, -jnp.inf), axis=-1, keepdims=True)
+        scale = jnp.maximum(qhi - qlo, 1e-12) / (levels - 1)
+        y = jnp.round((y - qlo) / scale) * scale + qlo
+    return jnp.where(valid, y, 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standalone primitives (property-test surface; same refinement math)
+# ---------------------------------------------------------------------------
+
 
 def topk_sparsify(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
-    """Keep the ceil(k_frac * n) largest-|x| entries of each row; zero the rest.
+    """Keep ~ceil(k_frac * n) largest-|x| entries of each row; zero the rest.
 
-    Operates on the last axis. k_frac >= 1 is a no-op.
+    Operates on the last axis via the threshold-refinement formulation (>= k
+    survivors, exact top-k support preserved). k_frac >= 1 is a no-op.
     """
+    if k_frac >= 1.0:
+        return x
+    n = x.shape[-1]
+    k = max(1, int(round(k_frac * n)))
+    return compress_rows_ref(x.reshape(-1, n), k, levels=0).reshape(x.shape)
+
+
+def topk_sparsify_sort(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Legacy sort-based exact top-k (jax.lax.top_k) — pre-fusion baseline."""
     if k_frac >= 1.0:
         return x
     n = x.shape[-1]
@@ -43,8 +126,32 @@ def quantize(x: jnp.ndarray, levels: int) -> jnp.ndarray:
     return (q * scale + lo).astype(x.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Message entry points
+# ---------------------------------------------------------------------------
+
+
 def compress_message(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp.ndarray:
-    y = topk_sparsify(x, k_frac) if 0.0 < k_frac < 1.0 else x
+    """Compress one message tensor (any rank >= 1) along its last axis.
+
+    Routes through the fused kernel path (Pallas on TPU, fused jnp fallback
+    elsewhere) as a single [rows, n] call.
+    """
+    if not (0.0 < k_frac < 1.0) and not (levels and levels > 1):
+        return x
+    from repro.kernels.compress import compress_rows  # lazy: avoids import cycle
+
+    n = x.shape[-1]
+    k = n if not (0.0 < k_frac < 1.0) else max(1, int(round(k_frac * n)))
+    return compress_rows(x.reshape(-1, n), k, levels).reshape(x.shape)
+
+
+def compress_message_sort(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp.ndarray:
+    """Pre-fusion reference path: sort-based top-k, then separate quantize.
+
+    Kept only as the baseline for ``benchmarks/bench_hsgd_hotpath.py``.
+    """
+    y = topk_sparsify_sort(x, k_frac) if 0.0 < k_frac < 1.0 else x
     if levels and levels > 1:
         y = quantize(y, levels)
     return y
@@ -54,12 +161,13 @@ def compressed_bytes(n_elements: int, k_frac: float, levels: int, dense_bytes_pe
     """Wire size of a compressed message.
 
     top-k: k values + k indices (32-bit); quantization: log2(b) bits/value.
-    Matches the paper's 'compression ratio log2(b)/32' accounting.
+    Matches the paper's 'compression ratio log2(b)/32' accounting. Pure-
+    Python cost model — never traces.
     """
     k = n_elements if not (0.0 < k_frac < 1.0) else max(1, int(round(k_frac * n_elements)))
     bits_per_val = dense_bytes_per_el * 8
     if levels and levels > 1:
-        bits_per_val = max(1, int(jnp.ceil(jnp.log2(levels))))
+        bits_per_val = max(1, math.ceil(math.log2(levels)))
     value_bytes = k * bits_per_val / 8.0
     index_bytes = 0.0 if k == n_elements else k * 4.0
     return value_bytes + index_bytes

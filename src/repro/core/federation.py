@@ -3,6 +3,12 @@
 Implements eq. (1) (local aggregation over the sampled device subset A_m) and
 eq. (2) (global weighted aggregation over groups) plus the A_m / mini-batch
 agreement of Algorithm 1 line 13 as jit-friendly index sampling.
+
+Sharding: every [M, ...] tensor is tagged with the logical "group" axis (see
+common/sharding.py). Under a non-trivial mesh the group axis rides the
+horizontal mesh axes, so eq. (2) lowers to a cross-group reduce collective
+and the broadcasts keep their outputs group-sharded instead of gathering a
+replicated copy per device. On a trivial mesh every constraint is a no-op.
 """
 from __future__ import annotations
 
@@ -12,15 +18,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FederationConfig
+from repro.common.sharding import constrain
+
+
+def _group_axes(x):
+    return ("group",) + (None,) * (x.ndim - 1)
+
+
+def _constrain_grouped(tree):
+    """Tag the leading group axis of every [M, ...] leaf."""
+    return jax.tree.map(lambda x: constrain(x, _group_axes(x)), tree)
 
 
 def local_aggregate(theta2_active):
     """Eq. (1): θ2_m = mean over the sampled devices. [M, A, ...] -> [M, ...]."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=1), theta2_active)
+    return _constrain_grouped(jax.tree.map(lambda x: jnp.mean(x, axis=1), theta2_active))
 
 
 def global_aggregate(theta, group_weights):
-    """Eq. (2): weighted mean over groups. [M, ...] -> [...]."""
+    """Eq. (2): weighted mean over groups. [M, ...] -> [...].
+
+    With the group axis mesh-sharded this is a weighted reduce collective
+    (psum of per-shard partial sums), not a replicated gather.
+    """
     w = group_weights / jnp.sum(group_weights)
 
     def agg(x):
@@ -32,14 +52,15 @@ def global_aggregate(theta, group_weights):
 
 def broadcast_to_groups(theta, M: int):
     """Send the global model back to every group. [...] -> [M, ...]."""
-    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (M,) + x.shape), theta)
+    return _constrain_grouped(
+        jax.tree.map(lambda x: jnp.broadcast_to(x[None], (M,) + x.shape), theta))
 
 
 def broadcast_to_devices(theta2_group, A: int):
     """Line 15: every sampled device restarts from the aggregated θ2_m."""
-    return jax.tree.map(
+    return _constrain_grouped(jax.tree.map(
         lambda x: jnp.broadcast_to(x[:, None], (x.shape[0], A) + x.shape[1:]), theta2_group
-    )
+    ))
 
 
 def sample_participants(key, fed: FederationConfig) -> jnp.ndarray:
@@ -59,4 +80,4 @@ def gather_batch(data: Dict[str, jnp.ndarray], idx: jnp.ndarray) -> Dict[str, jn
     def take(x):
         return jax.vmap(lambda xi, ii: jnp.take(xi, ii, axis=0))(x, idx)
 
-    return {k: take(v) for k, v in data.items()}
+    return _constrain_grouped({k: take(v) for k, v in data.items()})

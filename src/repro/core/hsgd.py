@@ -25,10 +25,11 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common.config import FederationConfig, TrainConfig
 from repro.core import federation as F
-from repro.core.compression import compress_message
+from repro.core.compression import compress_message_sort
 from repro.models.split_model import HybridModel
 from repro.optim import halving_schedule
 
@@ -56,12 +57,21 @@ def init_state(key, model: HybridModel, fed: FederationConfig, data, dtype=jnp.f
     theta0 = F.broadcast_to_groups(params["theta0"], M)
     theta1 = F.broadcast_to_groups(params["theta1"], M)
     theta2 = F.broadcast_to_devices(F.broadcast_to_groups(params["theta2"], M), A)
-    # placeholder stale ctx/batch; filled by the first exchange
+    # placeholder stale ctx/batch: every run/round exchanges before the first
+    # SGD step, so the placeholders are overwritten unread — shape them with
+    # eval_shape (zero FLOPs) instead of running real forward passes.
     idx = jnp.zeros((M, A), jnp.int32)
     batch = F.gather_batch(data, idx)
-    z1 = _h1_groups(model, theta1, batch["x1"])
-    z2 = _h2_groups(model, F.local_aggregate(theta2), batch["x2"])
-    stale = {"theta0": theta0, "z1": z1, "z2": z2}
+    z_shapes = jax.eval_shape(
+        lambda t1, t2, b: (
+            _h1_groups(model, t1, b["x1"]),
+            _h2_groups(model, F.local_aggregate(t2), b["x2"]),
+        ),
+        theta1, theta2, batch,
+    )
+    z1, z2 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), z_shapes)
+    # distinct buffers from theta0: donation in run() must not see aliases
+    stale = {"theta0": jax.tree.map(jnp.copy, theta0), "z1": z1, "z2": z2}
     return HSGDState(theta0, theta1, theta2, stale, batch, k_run, jnp.zeros((), jnp.int32))
 
 
@@ -143,8 +153,15 @@ def exchange(
     fed: FederationConfig,
     compression_k: float = 0.0,
     quant_levels: int = 0,
+    fused: bool = True,
 ) -> HSGDState:
-    """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange."""
+    """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange.
+
+    With compression on, the whole exchange message (θ0 snapshot pytree + ζ1
+    + ζ2) is compressed in ONE fused top-k+quantize row-matrix call (Pallas
+    kernel on TPU, fused jnp elsewhere). ``fused=False`` keeps the pre-fusion
+    leaf-wise sort-based path for benchmarking.
+    """
     key, k_sample = jax.random.split(state.key)
     theta2_group = F.local_aggregate(state.theta2)  # eq (1)
     theta2 = F.broadcast_to_devices(theta2_group, fed.sampled_devices)  # line 15
@@ -157,10 +174,16 @@ def exchange(
     stale_theta0 = state.theta0
 
     if compression_k or quant_levels:
-        comp = partial(compress_message, k_frac=compression_k or 1.0, levels=quant_levels)
-        z1 = comp(z1)
-        z2 = comp(z2)
-        stale_theta0 = jax.tree.map(comp, stale_theta0)
+        msg = {"theta0": stale_theta0, "z1": z1, "z2": z2}
+        if fused:
+            from repro.kernels.compress import compress_pytree
+
+            msg = compress_pytree(msg, compression_k or 1.0, quant_levels)
+        else:
+            comp = partial(compress_message_sort, k_frac=compression_k or 1.0,
+                           levels=quant_levels)
+            msg = jax.tree.map(comp, msg)
+        stale_theta0, z1, z2 = msg["theta0"], msg["z1"], msg["z2"]
 
     stale = {"theta0": stale_theta0, "z1": z1, "z2": z2}
     return state._replace(theta2=theta2, stale=stale, batch=batch, key=key)
@@ -194,14 +217,43 @@ def global_model(state: HSGDState, group_weights) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 
+def state_shardings(state: HSGDState, mesh: Mesh, rules=None) -> HSGDState:
+    """NamedShardings for an HSGDState: the leading group axis M rides the
+    mesh's horizontal ("data"/"pod") axes via the logical "group" rule; key
+    and step stay replicated. Non-divisible leaves fall back to replication,
+    so a trivial mesh degrades to the single-device layout."""
+    from repro.common.sharding import group_sharding
+
+    repl = NamedSharding(mesh, P())
+    grouped = lambda tree: jax.tree.map(lambda x: group_sharding(x.shape, mesh, rules), tree)
+    return HSGDState(
+        theta0=grouped(state.theta0),
+        theta1=grouped(state.theta1),
+        theta2=grouped(state.theta2),
+        stale=grouped(state.stale),
+        batch=grouped(state.batch),
+        key=repl,
+        step=repl,
+    )
+
+
 @dataclass(frozen=True)
 class HSGDRunner:
-    """Compiled HSGD trainer for a (model, federation, train) configuration."""
+    """Compiled HSGD trainer for a (model, federation, train) configuration.
+
+    ``run`` donates the state argument: the full replicated [M, A, ...] pytree
+    is updated in place instead of double-buffered, so the caller's input
+    state is consumed (rebind the return value, as every call site does).
+    Passing a non-trivial ``mesh`` shards every leading group axis over the
+    mesh's horizontal axes, lowering the eq. (1)/(2) aggregations and
+    broadcasts to collectives instead of replicated gathers.
+    """
 
     model: HybridModel
     fed: FederationConfig
     train: TrainConfig
     do_global_agg: bool = True  # False reproduces TDCD's missing phase
+    fused_compression: bool = True  # False keeps the pre-fusion sort path
 
     def _round(self, state: HSGDState, data, group_weights, lr_fn):
         fed, model = self.fed, self.model
@@ -214,6 +266,7 @@ class HSGDRunner:
             state = exchange(
                 model, state, data, fed,
                 self.train.compression_k, self.train.quantization_bits,
+                fused=self.fused_compression,
             )
 
             def sgd_step(state, _):
@@ -227,11 +280,23 @@ class HSGDRunner:
         state, losses = jax.lax.scan(interval, state, None, length=lam)
         return state, losses.reshape(-1)
 
-    def run(self, state: HSGDState, data, group_weights, rounds: int):
-        """Execute ``rounds`` global rounds; returns (state, per-step losses)."""
+    def run(self, state: HSGDState, data, group_weights, rounds: int,
+            mesh: Optional[Mesh] = None):
+        """Execute ``rounds`` global rounds; returns (state, per-step losses).
+
+        Donates ``state`` (no double-buffering of the [M, A, ...] pytree).
+        """
         lr_fn = halving_schedule(self.train.learning_rate, self.train.lr_halve_every)
 
-        @jax.jit
+        if mesh is not None and mesh.devices.size > 1:
+            from repro.common.sharding import group_sharding
+
+            state = jax.device_put(state, state_shardings(state, mesh))
+            data = jax.device_put(
+                data, jax.tree.map(lambda x: group_sharding(x.shape, mesh), data))
+            group_weights = jax.device_put(group_weights, NamedSharding(mesh, P()))
+
+        @partial(jax.jit, donate_argnums=(0,))
         def go(state, data, group_weights):
             def body(state, _):
                 return self._round(state, data, group_weights, lr_fn)

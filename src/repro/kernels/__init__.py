@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernels here:
+#   compress.py       — fused top-k + b-level quantize (C-HSGD exchange
+#                       hot path; ragged batched rows, backend autodetect)
+#   topk_sparsify.py  — compat wrapper over compress.py (top-k only)
+#   flash_attention.py, ssm_scan.py — LLM-scale tower blocks
+# ops.py holds the jit'd public wrappers, ref.py the pure-jnp oracles.

@@ -1,33 +1,35 @@
 """jit'd public wrappers around the Pallas kernels.
 
-On this CPU container every kernel runs in interpret mode (the TPU lowering
-is the target; interpret executes the same kernel body for validation). Set
-``REPRO_PALLAS_COMPILED=1`` on a real TPU to compile the Mosaic kernels.
+Backend selection is automatic: compiled Mosaic kernels on TPU, interpret
+mode elsewhere (interpret executes the same kernel body for validation).
+``REPRO_PALLAS_COMPILED=1/0`` forces the choice. The fused compression op
+additionally short-circuits to its bit-identical jnp reference off-TPU —
+interpret-mode Pallas is for validation, not the hot path.
 """
 from __future__ import annotations
-
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.compress import compress_rows, default_interpret, fused_compress_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
-from repro.kernels.topk_sparsify import topk_sparsify_pallas
-
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
 
 
 def topk_sparsify(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
     """Row-wise top-k sparsification of a message tensor (any rank >= 1)."""
-    if k_frac >= 1.0:
+    return fused_compress(x, k_frac, levels=0)
+
+
+def fused_compress(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp.ndarray:
+    """Fused top-k + b-level quantize along the last axis (any rank >= 1)."""
+    if k_frac >= 1.0 and not (levels and levels > 1):
         return x
     shape = x.shape
-    x2 = x.reshape(-1, shape[-1])
-    k = max(1, int(round(k_frac * shape[-1])))
-    out = topk_sparsify_pallas(x2, k, interpret=INTERPRET)
-    return out.reshape(shape)
+    n = shape[-1]
+    k = n if k_frac >= 1.0 else max(1, int(round(k_frac * n)))
+    return compress_rows(x.reshape(-1, n), k, levels).reshape(shape)
 
 
 def flash_attention(q, k, v, scale=None, window: int = 0):
@@ -36,7 +38,8 @@ def flash_attention(q, k, v, scale=None, window: int = 0):
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-    out = flash_attention_pallas(qf, kf, vf, scale=scale, window=window, interpret=INTERPRET)
+    out = flash_attention_pallas(qf, kf, vf, scale=scale, window=window,
+                                 interpret=default_interpret())
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
 
 
@@ -49,5 +52,5 @@ def ssm_scan(a, b, h0):
     for d in trail:
         C *= d
     hs, h_last = ssm_scan_pallas(a.reshape(B, T, C), b.reshape(B, T, C), h0.reshape(B, C),
-                                 interpret=INTERPRET)
+                                 interpret=default_interpret())
     return hs.reshape((B, T) + trail), h_last.reshape((B,) + trail)

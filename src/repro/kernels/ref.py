@@ -1,27 +1,23 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+The fused compression oracle is the canonical math in
+``core/compression.py::compress_rows_ref`` — re-exported here so kernel
+tests keep a single import site for every oracle.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compression import compress_rows_ref  # noqa: F401  (fused oracle)
 
 N_REFINE = 16
 NEG_INF = -2.0e38
 
 
 def topk_sparsify_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Same threshold-refinement algorithm as the kernel, in pure jnp."""
-    mag = jnp.abs(x.astype(jnp.float32))
-    hi = jnp.max(mag, axis=-1, keepdims=True)
-    lo = jnp.zeros_like(hi)
-
-    def refine(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=-1, keepdims=True)
-        return jnp.where(count > k, mid, lo), jnp.where(count > k, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, N_REFINE, refine, (lo, hi))
-    return jnp.where(mag >= lo, x, 0).astype(x.dtype)
+    """Threshold-refinement top-k (the fused kernel with quantization off)."""
+    return compress_rows_ref(x, k, levels=0)
 
 
 def topk_exact_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:

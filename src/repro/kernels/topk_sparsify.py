@@ -1,64 +1,28 @@
-"""Pallas TPU kernel: row-wise top-k magnitude sparsification.
+"""Row-wise top-k magnitude sparsification — thin wrapper over the fused
+compression kernel in ``kernels/compress.py`` (top-k only, quantization off).
 
-The communication hot-spot of C-HSGD/C-TDCD: before every intermediate-result
-exchange, each message row keeps only its k largest-|x| entries. A sort-based
-top-k maps poorly onto the TPU vector unit, so the kernel uses the TPU-native
-formulation: a fixed-iteration *binary search over the magnitude threshold*
-(log2-precision refinement against the row max), which is pure elementwise
-VPU work + row reductions, and then applies the mask. 16 iterations give a
-threshold tight to max|x| / 2^16 — bit-identical to the jnp oracle in
-kernels/ref.py, which implements the same refinement.
-
-BlockSpec: rows are tiled by ``block_rows``; the full feature axis stays
-resident in VMEM (messages are ζ embeddings — ≤ a few thousand floats/row,
-well under the ~16 MB VMEM budget at fp32).
+Kept as a stable entry point: the threshold-refinement formulation (binary
+search on the magnitude threshold — elementwise VPU work + row reductions, no
+sort) now lives in the fused kernel, which also applies b-level quantization
+in the same VMEM-resident pass when requested. See ``kernels/compress.py``
+for the BlockSpec/backend story.
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.compress import fused_compress_pallas
 
 N_REFINE = 16
 
 
-def _topk_kernel(x_ref, o_ref, *, k: int):
-    x = x_ref[...]  # [block_rows, n]
-    mag = jnp.abs(x.astype(jnp.float32))
-    hi = jnp.max(mag, axis=-1, keepdims=True)
-    lo = jnp.zeros_like(hi)
+def topk_sparsify_pallas(
+    x: jnp.ndarray, k: int, block_rows: int = 8, interpret: Optional[bool] = None
+):
+    """x: [rows, n] -> sparsified x, same shape/dtype (>= k survivors/row).
 
-    def refine(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        count = jnp.sum((mag >= mid).astype(jnp.int32), axis=-1, keepdims=True)
-        # too many survivors -> raise threshold; too few -> lower it
-        new_lo = jnp.where(count > k, mid, lo)
-        new_hi = jnp.where(count > k, hi, mid)
-        return new_lo, new_hi
-
-    lo, hi = jax.lax.fori_loop(0, N_REFINE, refine, (lo, hi))
-    thresh = lo  # keeps at least k entries (count(lo) >= k >= count(hi))
-    o_ref[...] = jnp.where(mag >= thresh, x, 0).astype(o_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
-def topk_sparsify_pallas(x: jnp.ndarray, k: int, block_rows: int = 8, interpret: bool = True):
-    """x: [rows, n] -> sparsified x, same shape/dtype."""
-    rows, n = x.shape
-    block_rows = min(block_rows, rows)
-    pad_rows = (-rows) % block_rows
-    if pad_rows:
-        x = jnp.pad(x, ((0, pad_rows), (0, 0)))
-    grid = (x.shape[0] // block_rows,)
-    out = pl.pallas_call(
-        functools.partial(_topk_kernel, k=k),
-        grid=grid,
-        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        interpret=interpret,
-    )(x)
-    return out[:rows]
+    ``interpret=None`` auto-detects the backend (interpret only off-TPU).
+    """
+    return fused_compress_pallas(x, k, levels=0, block_rows=block_rows, interpret=interpret)

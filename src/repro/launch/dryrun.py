@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.common.config import INPUT_SHAPES, get_config
+from repro.common.sharding import mesh_context
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import LONG_CTX_OK, build_programs, build_shardings
 
@@ -123,7 +124,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False, mesh=None,
             donate = (0,)  # params -> new params alias (no double buffering)
         else:
             donate = ()
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(fn, in_shardings=shardings, donate_argnums=donate).lower(*sds)
             compiled = lowered.compile()
             stats = analyze_compiled(lowered, compiled)

@@ -23,14 +23,41 @@ def conv_specs(k: int, c_in: int, c_out: int, name_scale=None) -> Dict[str, L.Sp
 
 
 def conv2d(params, x, stride: int = 1):
-    y = jax.lax.conv_general_dilated(
-        x,
-        params["w"].astype(x.dtype),
-        window_strides=(stride, stride),
-        padding="SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
+    """SAME conv. Stride 1 uses an im2col + GEMM formulation: the HSGD hot
+    path differentiates towers under vmap over groups/devices, and the
+    batched-filter conv backward lowers to grouped convolutions that fall off
+    XLA:CPU's fast path (and off the TPU MXU). Shifted-slice patches + a
+    batched matmul keep both forward and backward on plain dot_general."""
+    w = params["w"].astype(x.dtype)
+    # even kernels pad asymmetrically under SAME ((k-1)//2, k//2) — the
+    # symmetric im2col shift below only matches for odd k
+    if stride != 1 or w.shape[0] % 2 == 0:
+        y = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        return y + params["b"].astype(x.dtype)
+    k, _, c_in, c_out = w.shape
+    B, H, W, _ = x.shape
+    p = k // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    patches = jnp.concatenate(
+        [xp[:, i:i + H, j:j + W, :] for i in range(k) for j in range(k)], axis=-1)
+    y = patches @ w.reshape(k * k * c_in, c_out)
     return y + params["b"].astype(x.dtype)
+
+
+def max_pool_2x2(x):
+    """2x2/2 VALID max pool as crop + reshape + max.
+
+    Bit-identical to ``lax.reduce_window`` (same window set: positions
+    0,2,... up to the last full window) but its backward is a cheap masked
+    add instead of the single-threaded SelectAndScatter op."""
+    b, h, w, c = x.shape
+    return x[:, : h // 2 * 2, : w // 2 * 2, :].reshape(
+        b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
 
 
 def tower_specs(in_rows: int, width: int = 28, channels: Tuple[int, ...] = (16, 32), embed_dim: int = 64):
@@ -52,9 +79,7 @@ def tower_forward(params, x_flat, in_rows: int, width: int = 28, n_conv: int = 2
     x = x_flat.reshape(B, in_rows, width, 1)
     for i in range(n_conv):
         x = jax.nn.relu(conv2d(params[f"conv{i}"], x))
-        x = jax.lax.reduce_window(
-            x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-        )
+        x = max_pool_2x2(x)
     x = x.reshape(B, -1)
     return L.dense(params["proj"], x)
 

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.common.config import FederationConfig, TrainConfig
 from repro.core import federation as F
@@ -13,6 +14,7 @@ from repro.core.hsgd import (
     init_state,
     local_sgd_step,
     make_group_weights,
+    state_shardings,
 )
 from repro.data.partition import hybrid_partition
 from repro.data.synthetic import ORGANAMNIST, make_dataset
@@ -100,6 +102,96 @@ def test_compression_changes_exchange_but_training_still_converges():
     w = make_group_weights(data)
     state, losses = runner.run(state, data, w, rounds=10)
     assert losses[-1] < losses[0]
+
+
+def test_legacy_sort_path_still_converges():
+    """The pre-fusion sort-based compression path (bench baseline) works."""
+    model, fed, data = _mini(M=2, K=16, q=1, p=2)
+    train_c = TrainConfig(learning_rate=0.05, compression_k=0.25, quantization_bits=128)
+    runner = HSGDRunner(model, fed, train_c, fused_compression=False)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    w = make_group_weights(data)
+    state, losses = runner.run(state, data, w, rounds=10)
+    assert losses[-1] < losses[0]
+
+
+def test_run_donates_state_buffers():
+    """run() consumes its input state: no double-buffering of [M, A, ...]."""
+    model, fed, data = _mini()
+    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.01))
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    in_leaves = jax.tree_util.tree_leaves((state.theta0, state.theta1, state.theta2))
+    w = make_group_weights(data)
+    new_state, _ = runner.run(state, data, w, rounds=1)
+    donated = [leaf.is_deleted() for leaf in in_leaves]
+    if not any(donated):
+        pytest.skip("buffer donation not supported on this backend")
+    assert all(donated)
+    # the returned state is live and usable
+    assert np.isfinite(np.asarray(jax.tree_util.tree_leaves(new_state.theta0)[0])).all()
+
+
+def test_run_with_trivial_mesh_matches_no_mesh():
+    model, fed, data = _mini()
+    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.02))
+    w = make_group_weights(data)
+    s1 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    _, l_plain = runner.run(s1, data, w, rounds=2)
+    _, l_mesh = runner.run(s2, data, w, rounds=2, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(l_plain), np.asarray(l_mesh), rtol=1e-6)
+
+
+def test_state_shardings_group_axis_and_replicated_scalars():
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = state_shardings(state, mesh)
+    theta0_spec = jax.tree_util.tree_leaves(sh.theta0)[0].spec
+    assert theta0_spec and theta0_spec[0] in ("data", ("data",))  # M rides "data"
+    assert sh.key.spec == () or all(s is None for s in sh.key.spec)  # replicated
+    assert sh.step.spec == () or all(s is None for s in sh.step.spec)
+
+
+@pytest.mark.slow
+def test_group_sharded_run_subprocess():
+    """Run HSGD with M=2 groups sharded over a data=2 mesh of 2 fake host
+    devices; losses must match the single-device run (device count must be
+    set before jax init, hence the subprocess)."""
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, os.path.join(%r, "src"))
+sys.path.insert(0, %r)
+import jax, numpy as np
+from tests.test_hsgd import _mini
+from repro.common.config import TrainConfig
+from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
+model, fed, data = _mini()
+runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.02, compression_k=0.25,
+                                            quantization_bits=128))
+w = make_group_weights(data)
+mesh = jax.make_mesh((2, 1), ("data", "model"))
+s1 = init_state(jax.random.PRNGKey(0), model, fed, data)
+s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+_, l_plain = runner.run(s1, data, w, rounds=2)
+st, l_mesh = runner.run(s2, data, w, rounds=2, mesh=mesh)
+np.testing.assert_allclose(np.asarray(l_plain), np.asarray(l_mesh), rtol=1e-5)
+leaf = jax.tree_util.tree_leaves(st.theta0)[0]
+assert len(leaf.sharding.device_set) == 2, leaf.sharding  # genuinely sharded
+print("OK")
+""" % (repo, repo)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
 
 
 def test_sampled_participants_valid_and_distinct():

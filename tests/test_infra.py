@@ -97,6 +97,7 @@ import sys
 sys.path.insert(0, os.path.join(%r, "src"))
 import jax
 from repro.common.config import get_config, INPUT_SHAPES, InputShape
+from repro.common.sharding import mesh_context
 from repro.launch.mesh import make_debug_mesh
 from repro.launch.steps import build_programs, build_shardings
 
@@ -106,7 +107,7 @@ shape = InputShape("t", 64, 8, "train")
 progs = build_programs(cfg, shape)
 for name, (fn, sds, axes) in progs.entries.items():
     sh = tuple(build_shardings(s, a, mesh) for s, a in zip(sds, axes))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         c = jax.jit(fn, in_shardings=sh).lower(*sds).compile()
         assert c.cost_analysis() is not None
 print("OK")

@@ -6,9 +6,97 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.compress import compress_pytree, compress_rows, fused_compress_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 from repro.kernels.topk_sparsify import topk_sparsify_pallas
+
+# The hot path always runs the fused math under jit; eager jnp can differ by
+# one ulp in the quantization arithmetic (FMA fusion), so the bit-exact
+# oracle is the JITTED reference.
+_oracle = jax.jit(ref.compress_rows_ref, static_argnames=("levels",))
+
+
+# ---------------------------------------------------------------------------
+# fused compress (top-k + b-level quantize)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rows,n", [(4, 64), (16, 300), (3, 1000), (1, 128)])
+@pytest.mark.parametrize("levels,k_div", [(0, 10), (128, 10), (16, 3), (128, 0)])
+def test_fused_compress_matches_oracle(rows, n, levels, k_div):
+    """top-k only (levels=0), fused, and quantize only (k_div=0 -> k=n)."""
+    x = jax.random.normal(jax.random.PRNGKey(rows * n + levels), (rows, n))
+    k = n if k_div == 0 else max(1, n // k_div)
+    out = fused_compress_pallas(x, k, levels=levels)
+    oracle = _oracle(x, k, levels=levels)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_compress_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 256)).astype(dtype)
+    out = fused_compress_pallas(x, 25, levels=128)
+    oracle = _oracle(x, 25, levels=128)
+    assert out.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(out, np.float32), np.asarray(oracle, np.float32))
+
+
+@pytest.mark.parametrize("levels", [0, 128])
+def test_fused_compress_ragged_rows(levels):
+    """Rows padded to a common width + per-row valid length == compressing
+    each unpadded row block separately (the compress_pytree batching path)."""
+    widths = [64, 300, 129]
+    rows = 5
+    blocks = [jax.random.normal(jax.random.PRNGKey(i), (rows, w)) for i, w in enumerate(widths)]
+    n_max = max(widths)
+    padded = jnp.concatenate(
+        [jnp.pad(b, ((0, 0), (0, n_max - w))) for b, w in zip(blocks, widths)], axis=0)
+    k = jnp.concatenate([jnp.full((rows,), max(1, w // 10), jnp.int32) for w in widths])
+    row_len = jnp.concatenate([jnp.full((rows,), w, jnp.int32) for w in widths])
+    out = fused_compress_pallas(padded, k, levels=levels, row_len=row_len)
+    for i, (b, w) in enumerate(zip(blocks, widths)):
+        want = _oracle(b, max(1, w // 10), levels=levels)
+        got = out[i * rows:(i + 1) * rows, :w]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        # padding columns come back zeroed
+        assert not np.asarray(out[i * rows:(i + 1) * rows, w:]).any()
+
+
+def test_fused_compress_k_frac_one_noop():
+    """k >= n with quantization off must return x unchanged (bitwise)."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (6, 200))
+    np.testing.assert_array_equal(np.asarray(fused_compress_pallas(x, 200, levels=0)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(ops.fused_compress(x, 1.0, 0)), np.asarray(x))
+    # per-row no-op: k >= row width keeps every entry
+    out = fused_compress_pallas(x, 1000, levels=0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_compress_rows_router_matches_kernel():
+    """The backend router (jnp fallback off-TPU) agrees with the kernel."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (9, 320))
+    out_router = jax.jit(lambda a: compress_rows(a, 32, 128))(x)
+    out_kernel = fused_compress_pallas(x, 32, levels=128)
+    np.testing.assert_array_equal(np.asarray(out_router), np.asarray(out_kernel))
+
+
+def test_compress_pytree_matches_per_leaf():
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(5), (3, 4, 96)),
+        "b": jax.random.normal(jax.random.PRNGKey(6), (3, 17)),
+        "c": jax.random.normal(jax.random.PRNGKey(7), (2, 5, 8, 130)),
+    }
+    out = jax.jit(lambda t: compress_pytree(t, 0.25, 128))(tree)
+    for name, leaf in tree.items():
+        n = leaf.shape[-1]
+        k = max(1, round(0.25 * n))
+        want = _oracle(leaf.reshape(-1, n), k, levels=128).reshape(leaf.shape)
+        np.testing.assert_array_equal(np.asarray(out[name]), np.asarray(want),
+                                      err_msg=f"leaf {name}")
+    # no-op settings return the tree untouched
+    assert compress_pytree(tree, 1.0, 0) is tree
 
 
 # ---------------------------------------------------------------------------
