@@ -1,77 +1,161 @@
-"""Paper Figs. 7-9: the three adaptive strategies.
+"""Fixed-(P,Q) vs closed-loop adaptive HSGD — bytes-to-target-loss.
 
-Fig. 7 (strategy 1): P=Q minimizes comm cost to a target AUC vs P>Q settings.
-Fig. 8 (strategy 2): comm cost vs P=Q sweep is U-shaped; the strategy-2
-                     optimum lands near the bottom.
-Fig. 9 (strategy 3): the better learning rate flips as P (or Q) grows.
+The paper's headline adaptive claim (Figs. 7–9 distilled): the §VI controller
+should reach the fixed-interval baseline's loss while spending *fewer modeled
+communication bytes* (eq. (19) cost model). This benchmark runs both on the
+same data/seed/step budget and records the comparison into BENCH_adaptive.json:
+
+  * fixed     — HSGDRunner at a constant (P, Q, η), uncompressed messages;
+  * adaptive  — AdaptiveHSGDRunner re-picking P = Q and η every round from
+                online ρ/δ/‖∇F‖² probes, with the byte governor holding the
+                run under ``--budget-frac`` × the fixed run's bill.
+
+``--figs`` additionally reprints the legacy Fig. 7/8/9 sweep tables.
+
+  PYTHONPATH=src python benchmarks/bench_adaptive.py
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
+
 import numpy as np
 
-from benchmarks.common import (
-    comm_bytes_at_step,
-    csv_row,
-    eval_model,
-    run_algorithm,
-    setup_experiment,
-    sizes_for,
-)
-from repro.core.adaptive import estimate_rho_delta, recommend_settings
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import csv_row, setup_experiment, sizes_for
 import jax
 
-
-def auc_step_curve(exp, rounds):
-    out = run_algorithm(exp, "hsgd", rounds)
-    m = eval_model(exp, out["global_model"])
-    return out, m
-
-
-def fig7(dataset="mimic3", total_steps=48):
-    print(f"# Fig. 7 analogue ({dataset}): strategy 1 — P=Q beats P>Q at equal step budget")
-    csv_row("P", "Q", "final_loss", "auc", "comm_MB_per_group")
-    for (p, q) in ((1, 1), (2, 1), (4, 1), (2, 2), (4, 2), (4, 4), (8, 4), (8, 8)):
-        exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
-                              alpha=0.25, q=q, p=p, lr=0.02)
-        out, m = auc_step_curve(exp, rounds=total_steps // p)
-        sizes = sizes_for(exp, "hsgd")
-        mb = comm_bytes_at_step(exp, "hsgd", sizes, len(out["losses"])) / 1e6
-        csv_row(p, q, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4), round(mb, 3))
+from repro.common.config import FederationConfig
+from repro.core import comm_model as CM
+from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner
+from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
+from repro.core.metrics import smoothed_losses, steps_to_target
 
 
-def fig8(dataset="mimic3", total_steps=48):
-    print(f"# Fig. 8 analogue ({dataset}): strategy 2 — sweep P=Q")
-    csv_row("PQ", "final_loss", "auc", "comm_MB_per_group")
-    for pq in (1, 2, 4, 8, 16):
-        exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
-                              alpha=0.25, q=pq, p=pq, lr=0.02)
-        out, m = auc_step_curve(exp, rounds=max(1, total_steps // pq))
-        sizes = sizes_for(exp, "hsgd")
-        mb = comm_bytes_at_step(exp, "hsgd", sizes, len(out["losses"])) / 1e6
-        csv_row(pq, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4), round(mb, 3))
-    # strategy-2 recommendation from the probes
-    exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32)
-    params0 = exp["model"].init(jax.random.PRNGKey(0))
-    probe = estimate_rho_delta(exp["model"], params0, exp["data"], jax.random.PRNGKey(1))
-    rec = recommend_settings(probe, total_steps, 0.02, exp["fed"])
-    csv_row("strategy2_recommendation", rec["P"], round(rec["eta"], 5), round(probe["rho"], 3))
+def run_fixed(exp, total_steps):
+    """Constant-(P,Q) baseline; returns (losses, per-step cumulative bytes)."""
+    model, fed, train = exp["model"], exp["fed"], exp["train"]
+    runner = HSGDRunner(model, fed, train)
+    data, w = exp["data"], make_group_weights(exp["data"])
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    rounds = max(1, total_steps // fed.global_interval)
+    state, losses = runner.run(state, data, w, rounds=rounds)
+    losses = np.asarray(jax.device_get(losses))
+
+    sizes = sizes_for(exp, "hsgd")  # the suite's shared uncompressed size model
+    per_iter = CM.comm_cost_per_iteration(sizes, fed) * fed.num_groups
+    bytes_curve = per_iter * np.arange(1, len(losses) + 1)
+    return losses, bytes_curve
 
 
-def fig9(dataset="mimic3", total_steps=40):
-    print(f"# Fig. 9 analogue ({dataset}): strategy 3 — eta should shrink as P (or Q) grows")
-    csv_row("P", "Q", "eta", "final_loss", "auc")
-    for (p, q) in ((10, 5), (20, 5), (10, 10), (20, 10)):
-        for eta in (0.0025, 0.005, 0.01):
-            exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
-                                  alpha=0.25, q=q, p=p, lr=eta)
-            out, m = auc_step_curve(exp, rounds=max(1, total_steps // p))
-            csv_row(p, q, eta, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4))
+def run_adaptive(exp, total_steps, byte_budget, max_interval):
+    model, fed, train = exp["model"], exp["fed"], exp["train"]
+    data, w = exp["data"], make_group_weights(exp["data"])
+    cfg = AdaptiveConfig(total_steps=total_steps, byte_budget=byte_budget,
+                         max_interval=max_interval,
+                         eta_max=max(train.learning_rate * 10, 0.05))
+    controller = AdaptiveHSGDRunner(model, fed, train, cfg)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state, losses, history = controller.run(state, data, w,
+                                            probe_key=jax.random.PRNGKey(1))
+    # per-step cumulative bytes: each round's bill amortized over its P steps
+    steps_bytes = np.concatenate([
+        np.full(h["P"], h["round_bytes"] / h["P"]) for h in history])
+    bytes_curve = np.cumsum(steps_bytes)
+    return np.asarray(losses), bytes_curve, history
 
 
-def main():
-    fig7()
-    fig8()
-    fig9()
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="mimic3")
+    ap.add_argument("--steps", type=int, default=48)
+    ap.add_argument("--p", type=int, default=1)
+    ap.add_argument("--q", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=32)
+    ap.add_argument("--budget-frac", type=float, default=0.5,
+                    help="adaptive byte budget as a fraction of the fixed bill")
+    ap.add_argument("--max-interval", type=int, default=16)
+    ap.add_argument("--smooth", type=int, default=4)
+    ap.add_argument("--figs", action="store_true",
+                    help="also print the legacy Fig. 7/8/9 sweep tables")
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..",
+                                                  "BENCH_adaptive.json"))
+    args = ap.parse_args(argv)
+
+    exp = setup_experiment(dataset=args.dataset, n=args.samples, groups=args.groups,
+                           devices=args.devices, alpha=0.25, q=args.q, p=args.p,
+                           lr=args.lr)
+    # both runs must spend the SAME step budget: round down to whole fixed rounds
+    steps = max(1, args.steps // args.p) * args.p
+    print(f"# fixed (P={args.p}, Q={args.q}) vs adaptive, {args.dataset}, "
+          f"{steps} steps")
+    fixed_losses, fixed_bytes = run_fixed(exp, steps)
+    budget = float(fixed_bytes[-1]) * args.budget_frac
+    ad_losses, ad_bytes, history = run_adaptive(exp, steps, budget,
+                                                args.max_interval)
+
+    target = float(smoothed_losses(fixed_losses, args.smooth)[-1])
+    ad_hit = steps_to_target(ad_losses, target, args.smooth)
+    fx_hit = steps_to_target(fixed_losses, target, args.smooth)
+
+    summary = {
+        "target_loss": target,
+        "fixed_final_loss": float(smoothed_losses(fixed_losses, args.smooth)[-1]),
+        "adaptive_final_loss": float(smoothed_losses(ad_losses, args.smooth)[-1]),
+        "fixed_total_bytes": float(fixed_bytes[-1]),
+        "adaptive_total_bytes": float(ad_bytes[-1]),
+        "adaptive_byte_budget": budget,
+        "fixed_steps_to_target": fx_hit,
+        "adaptive_steps_to_target": ad_hit,
+        "fixed_bytes_to_target": float(fixed_bytes[fx_hit]) if fx_hit is not None else None,
+        "adaptive_bytes_to_target": float(ad_bytes[ad_hit]) if ad_hit is not None else None,
+        "adaptive_reaches_target": ad_hit is not None,
+        "adaptive_bytes_lower": float(ad_bytes[-1]) < float(fixed_bytes[-1]),
+    }
+
+    csv_row("run", "final_loss", "total_MB", "steps_to_target", "MB_to_target")
+    csv_row("fixed", round(summary["fixed_final_loss"], 4),
+            round(summary["fixed_total_bytes"] / 1e6, 3), fx_hit,
+            round((summary["fixed_bytes_to_target"] or 0) / 1e6, 3))
+    csv_row("adaptive", round(summary["adaptive_final_loss"], 4),
+            round(summary["adaptive_total_bytes"] / 1e6, 3), ad_hit,
+            round((summary["adaptive_bytes_to_target"] or 0) / 1e6, 3)
+            if ad_hit is not None else None)
+    for h in history:
+        print(f"#   round {h['round']:3d}: P=Q={h['P']:3d} eta={h['eta']:.4g} "
+              f"rung={h['rung']} bytes={h['bytes_total'] / 1e6:.2f}MB "
+              f"loss={h['loss_last']:.4f}")
+
+    result = {
+        "config": {"dataset": args.dataset, "steps": steps, "p": args.p,
+                   "q": args.q, "lr": args.lr, "samples": args.samples,
+                   "groups": args.groups, "devices": args.devices,
+                   "budget_frac": args.budget_frac,
+                   "max_interval": args.max_interval, "smooth": args.smooth},
+        "summary": summary,
+        "fixed": {"losses": fixed_losses.tolist(),
+                  "bytes": fixed_bytes.tolist()},
+        "adaptive": {"losses": ad_losses.tolist(),
+                     "bytes": ad_bytes.tolist(),
+                     "history": history},
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {os.path.abspath(args.out)}")
+
+    if args.figs:
+        from benchmarks.bench_adaptive_figs import fig7, fig8, fig9
+
+        fig7(args.dataset)
+        fig8(args.dataset)
+        fig9(args.dataset)
+    return result
 
 
 if __name__ == "__main__":

@@ -1,0 +1,79 @@
+"""Paper Figs. 7-9 sweep tables (legacy offline-strategy views).
+
+Fig. 7 (strategy 1): P=Q minimizes comm cost to a target AUC vs P>Q settings.
+Fig. 8 (strategy 2): comm cost vs P=Q sweep is U-shaped; the strategy-2
+                     optimum lands near the bottom.
+Fig. 9 (strategy 3): the better learning rate flips as P (or Q) grows.
+
+The closed-loop comparison lives in ``bench_adaptive.py``; these tables are
+kept for reproducing the paper's static sweeps (``bench_adaptive.py --figs``).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (
+    comm_bytes_at_step,
+    csv_row,
+    eval_model,
+    run_algorithm,
+    setup_experiment,
+    sizes_for,
+)
+from repro.core.adaptive import estimate_rho_delta, recommend_settings
+import jax
+
+
+def auc_step_curve(exp, rounds):
+    out = run_algorithm(exp, "hsgd", rounds)
+    m = eval_model(exp, out["global_model"])
+    return out, m
+
+
+def fig7(dataset="mimic3", total_steps=48):
+    print(f"# Fig. 7 analogue ({dataset}): strategy 1 — P=Q beats P>Q at equal step budget")
+    csv_row("P", "Q", "final_loss", "auc", "comm_MB_per_group")
+    for (p, q) in ((1, 1), (2, 1), (4, 1), (2, 2), (4, 2), (4, 4), (8, 4), (8, 8)):
+        exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
+                              alpha=0.25, q=q, p=p, lr=0.02)
+        out, m = auc_step_curve(exp, rounds=total_steps // p)
+        sizes = sizes_for(exp, "hsgd")
+        mb = comm_bytes_at_step(exp, "hsgd", sizes, len(out["losses"])) / 1e6
+        csv_row(p, q, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4), round(mb, 3))
+
+
+def fig8(dataset="mimic3", total_steps=48):
+    print(f"# Fig. 8 analogue ({dataset}): strategy 2 — sweep P=Q")
+    csv_row("PQ", "final_loss", "auc", "comm_MB_per_group")
+    for pq in (1, 2, 4, 8, 16):
+        exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
+                              alpha=0.25, q=pq, p=pq, lr=0.02)
+        out, m = auc_step_curve(exp, rounds=max(1, total_steps // pq))
+        sizes = sizes_for(exp, "hsgd")
+        mb = comm_bytes_at_step(exp, "hsgd", sizes, len(out["losses"])) / 1e6
+        csv_row(pq, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4), round(mb, 3))
+    # strategy-2 recommendation from the probes
+    exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32)
+    params0 = exp["model"].init(jax.random.PRNGKey(0))
+    probe = estimate_rho_delta(exp["model"], params0, exp["data"], jax.random.PRNGKey(1))
+    rec = recommend_settings(probe, total_steps, 0.02, exp["fed"])
+    csv_row("strategy2_recommendation", rec["P"], round(rec["eta"], 5), round(probe["rho"], 3))
+
+
+def fig9(dataset="mimic3", total_steps=40):
+    print(f"# Fig. 9 analogue ({dataset}): strategy 3 — eta should shrink as P (or Q) grows")
+    csv_row("P", "Q", "eta", "final_loss", "auc")
+    for (p, q) in ((10, 5), (20, 5), (10, 10), (20, 10)):
+        for eta in (0.0025, 0.005, 0.01):
+            exp = setup_experiment(dataset=dataset, n=512, groups=4, devices=32,
+                                  alpha=0.25, q=q, p=p, lr=eta)
+            out, m = auc_step_curve(exp, rounds=max(1, total_steps // p))
+            csv_row(p, q, eta, round(float(out["losses"][-1]), 4), round(m["auc_roc"], 4))
+
+
+def main():
+    fig7()
+    fig8()
+    fig9()
+
+
+if __name__ == "__main__":
+    main()

@@ -93,13 +93,13 @@ def comm_bytes_at_step(exp, algo, sizes, step):
         per_iter = (sizes.theta0 + sizes.z1 + sizes.z2) * sizes.n_active \
             + (sizes.theta0 + sizes.theta1 + sizes.theta2) * sizes.n_active / fed.global_interval
         return per_iter * step
-    eff = fed
     if algo in ("tdcd", "c-tdcd"):
+        # no global phase: P -> "infinity" (a huge multiple of Q, so the
+        # validated FederationConfig still has an integral Λ)
         eff = FederationConfig(local_interval=fed.local_interval,
-                               global_interval=10**9)  # no global phase
-        return CM.comm_cost_per_iteration(sizes, FederationConfig(
-            local_interval=fed.local_interval, global_interval=10**9)) * step + sizes.raw_upfront
-    return CM.total_comm_cost(sizes, eff, step)
+                               global_interval=fed.local_interval * 10**8)
+        return CM.comm_cost_per_iteration(sizes, eff) * step + sizes.raw_upfront
+    return CM.total_comm_cost(sizes, fed, step)
 
 
 def csv_row(*cols):

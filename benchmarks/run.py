@@ -33,7 +33,7 @@ def main(argv=None) -> None:
         "bench_convergence": bench_convergence.main,
         "bench_comm_cost": bench_comm_cost.main,
         "bench_compute_cost": bench_compute_cost.main,
-        "bench_adaptive": bench_adaptive.main,
+        "bench_adaptive": lambda: bench_adaptive.main([]),  # own argparse: don't leak run.py's argv
         "roofline": roofline.main,
     }
     todo = [args.only] if args.only else list(benches)

@@ -1,9 +1,11 @@
-"""Adaptive-strategy walkthrough on the MIMIC-III-like LSTM task:
+"""Closed-loop adaptive HSGD on the MIMIC-III-like LSTM task (paper §VI):
 
-1. probe ρ, δ, F(θ⁰) with a short pre-training pass (paper §VI-B),
-2. apply strategies 1-3 to pick P = Q and η,
-3. train with the recommended settings vs a naive (P=Q=1) run and compare
-   the communication bill for the same final quality.
+1. the controller seeds ρ, δ, F(θ⁰) with a short pre-training probe (§VI-B),
+2. every global round it re-estimates ρ/δ/‖∇F‖² from that round's own
+   gradients and re-picks P = Q (strategies 1-2) and η (strategy 3),
+3. a byte governor walks the compression ladder so the whole run stays under
+   a user byte budget (here: 40% of the naive P=Q=1 bill),
+4. we compare quality + modeled communication against the naive fixed run.
 
   PYTHONPATH=src python examples/adaptive_ehealth_lstm.py
 """
@@ -16,8 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.config import FederationConfig, TrainConfig
-from repro.core.adaptive import estimate_rho_delta, recommend_settings
-from repro.core.comm_model import message_sizes, total_comm_cost
+from repro.core.comm_model import comm_cost_per_iteration, message_sizes
+from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner
 from repro.core.hsgd import HSGDRunner, global_model, init_state, make_group_weights
 from repro.core.metrics import evaluate_global
 from repro.data.partition import hybrid_partition
@@ -27,47 +29,49 @@ from repro.models.split_model import lstm_hybrid
 TOTAL_STEPS = 64
 
 
-def run(fed, lr, data, model, weights):
-    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=lr))
-    state = init_state(jax.random.PRNGKey(0), model, fed, data)
-    rounds = max(1, TOTAL_STEPS // fed.global_interval)
-    state, losses = runner.run(state, data, weights, rounds=rounds)
-    return global_model(state, weights), losses
-
-
 def main():
-    fed0 = FederationConfig(num_groups=4, devices_per_group=32, alpha=0.25,
-                            local_interval=1, global_interval=1)
+    fed = FederationConfig(num_groups=4, devices_per_group=32, alpha=0.25,
+                           local_interval=1, global_interval=1)
+    train = TrainConfig(learning_rate=0.01)
     X, y = make_dataset(MIMIC3, 512, seed=0)
-    fdata = hybrid_partition(MIMIC3, X, y, fed0, seed=0)
+    fdata = hybrid_partition(MIMIC3, X, y, fed, seed=0)
     data = {k: jnp.asarray(v) for k, v in fdata.stacked().items()}
     model = lstm_hybrid(n_features=76, hospital_features=36, n_classes=MIMIC3.n_classes)
     weights = make_group_weights(data)
-
-    # 1) probe
-    params0 = model.init(jax.random.PRNGKey(0))
-    probe = estimate_rho_delta(model, params0, data, jax.random.PRNGKey(1))
-    print(f"probe: rho={probe['rho']:.3f} delta={probe['delta']:.3f} F0={probe['F0']:.3f}")
-
-    # 2) strategies 1-3
-    rec = recommend_settings(probe, TOTAL_STEPS, eta=0.01, fed=fed0)
-    print(f"recommended: P=Q={rec['P']}  eta={rec['eta']:.4g} (cap {rec['eta_max']:.4g})")
-
-    # 3) naive vs adaptive
-    sizes = message_sizes(params0, 32 * 64, 32 * 64, fed0.sampled_devices)
-    gm_naive, losses_naive = run(fed0, 0.01, data, model, weights)
-    fed_star = FederationConfig(num_groups=4, devices_per_group=32, alpha=0.25,
-                                local_interval=rec["P"], global_interval=rec["P"])
-    gm_star, losses_star = run(fed_star, min(rec["eta"], 0.05), data, model, weights)
-
     X1, X2 = vertical_split(MIMIC3, X)
+
+    # naive fixed baseline: P = Q = 1, uncompressed
+    runner = HSGDRunner(model, fed, train)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state, losses_naive = runner.run(state, data, weights, rounds=TOTAL_STEPS)
+    gm_naive = global_model(state, weights)
+
+    params0 = model.init(jax.random.PRNGKey(0))
+    sizes = message_sizes(params0, 8 * 64, 8 * 64, fed.sampled_devices)
+    naive_bytes = comm_cost_per_iteration(sizes, fed) * fed.num_groups * TOTAL_STEPS
+
+    # closed loop under a 40% byte budget
+    cfg = AdaptiveConfig(total_steps=TOTAL_STEPS, byte_budget=0.4 * naive_bytes,
+                         max_interval=16, eta_max=0.05)
+    controller = AdaptiveHSGDRunner(model, fed, train, cfg)
+    state2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state2, losses_ad, history = controller.run(state2, data, weights,
+                                                probe_key=jax.random.PRNGKey(1))
+    gm_ad = global_model(state2, weights)
+
+    print("round  P=Q   eta      rung  Γ(P,Q)    bytes(MB)  loss")
+    for h in history:
+        print(f"{h['round']:5d} {h['P']:4d}  {h['eta']:.5f}  {h['rung']:4d}  "
+              f"{h['gamma']:8.3g}  {h['bytes_total'] / 1e6:8.2f}  {h['loss_last']:.4f}")
+
     m_naive = evaluate_global(model, gm_naive, X1, X2, y)
-    m_star = evaluate_global(model, gm_star, X1, X2, y)
-    c_naive = total_comm_cost(sizes, fed0, TOTAL_STEPS) / 1e6
-    c_star = total_comm_cost(sizes, fed_star, TOTAL_STEPS) / 1e6
-    print(f"naive   P=Q=1 : auc={m_naive['auc_roc']:.3f}  comm={c_naive:.2f} MB/group")
-    print(f"adaptive P=Q={rec['P']}: auc={m_star['auc_roc']:.3f}  comm={c_star:.2f} MB/group")
-    print(f"communication saved: {100 * (1 - c_star / c_naive):.0f}%")
+    m_ad = evaluate_global(model, gm_ad, X1, X2, y)
+    ad_bytes = history[-1]["bytes_total"]
+    print(f"\nnaive    P=Q=1   : loss={float(losses_naive[-1]):.4f} "
+          f"auc={m_naive['auc_roc']:.3f}  comm={naive_bytes / 1e6:.2f} MB")
+    print(f"adaptive (closed): loss={float(losses_ad[-1]):.4f} "
+          f"auc={m_ad['auc_roc']:.3f}  comm={ad_bytes / 1e6:.2f} MB")
+    print(f"communication saved: {100 * (1 - ad_bytes / naive_bytes):.0f}%")
 
 
 if __name__ == "__main__":

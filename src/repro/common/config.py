@@ -202,9 +202,17 @@ class FederationConfig:
     hospital_feature_frac: float = 0.5
     non_iid_labels_per_group: int = 2
 
+    def __post_init__(self):
+        if self.local_interval < 1 or self.global_interval < 1:
+            raise ValueError(
+                f"intervals must be >= 1, got Q={self.local_interval} P={self.global_interval}")
+        if self.global_interval % self.local_interval:
+            raise ValueError(
+                f"global_interval P={self.global_interval} must be a multiple of "
+                f"local_interval Q={self.local_interval} (Λ = P/Q is integral in Alg. 1)")
+
     @property
     def lam(self) -> int:
-        assert self.global_interval % self.local_interval == 0, "P must be a multiple of Q"
         return self.global_interval // self.local_interval
 
     @property

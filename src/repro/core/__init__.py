@@ -1,3 +1,4 @@
 """The paper's contribution: hybrid federated learning (HSGD) + strategies."""
 from repro.core.hsgd import HSGDRunner, HSGDState, init_state, make_group_weights  # noqa: F401
 from repro.core.baselines import JFLRunner, make_runner, merge_groups_for_tdcd  # noqa: F401
+from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner, plan_round  # noqa: F401

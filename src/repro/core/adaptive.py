@@ -101,6 +101,7 @@ def estimate_rho_delta(
     data: Dict[str, jnp.ndarray],
     key,
     n_probes: int = 8,
+    n_perturb: int = 4,
     batch: int = 32,
     perturb: float = 1e-2,
 ) -> Dict[str, float]:
@@ -109,46 +110,62 @@ def estimate_rho_delta(
     δ²: variance of mini-batch gradients around their mean.
     ρ : max ||∇F(θ+u) − ∇F(θ)|| / ||u|| over random perturbations u.
     Returns also F0 (initial loss) for strategies 1–2.
+
+    The whole probe is ONE jitted call: the n_probes mini-batch gradients and
+    the n_perturb Lipschitz secants are vmapped over their PRNG keys instead
+    of looped in Python, so the probe costs a single compile + dispatch. Batch
+    sizes are clamped to the M*K available samples (``jax.random.choice(...,
+    replace=False)`` raises beyond that).
     """
     M, K = data["y"].shape[:2]
-    x1 = data["x1"].reshape((M * K,) + data["x1"].shape[2:])
-    x2 = data["x2"].reshape((M * K,) + data["x2"].shape[2:])
+    total = M * K
+    batch = int(min(batch, total))
+    lip_batch = int(min(4 * batch, total))
+    x1 = data["x1"].reshape((total,) + data["x1"].shape[2:])
+    x2 = data["x2"].reshape((total,) + data["x2"].shape[2:])
     y = data["y"].reshape(-1)
 
     loss_fn = lambda p, a, b, yy: model.full_loss(p, a, b, yy)
-    grad_fn = jax.jit(jax.grad(loss_fn))
-    val_fn = jax.jit(loss_fn)
 
-    keys = jax.random.split(key, n_probes + 1)
-    grads = []
-    for i in range(n_probes):
-        idx = jax.random.choice(keys[i], M * K, (batch,), replace=False)
-        grads.append(grad_fn(params, x1[idx], x2[idx], y[idx]))
-    mean_grad = jax.tree.map(lambda *xs: sum(xs) / len(xs), *grads)
-    dev = [tree_dot(tree_sub(g, mean_grad), tree_sub(g, mean_grad)) for g in grads]
-    delta2 = float(sum(dev) / len(dev))
+    @jax.jit
+    def probe(params, x1, x2, y, key):
+        k_noise, k_lip, k_pert = jax.random.split(key, 3)
 
-    # Lipschitz probe on the full-batch-ish gradient
-    idx = jax.random.choice(keys[-1], M * K, (min(4 * batch, M * K),), replace=False)
-    g_base = grad_fn(params, x1[idx], x2[idx], y[idx])
-    rho_max = 0.0
-    for i in range(4):
-        k = jax.random.fold_in(keys[-1], i)
+        def batch_grad(k):
+            idx = jax.random.choice(k, total, (batch,), replace=False)
+            return jax.grad(loss_fn)(params, x1[idx], x2[idx], y[idx])
+
+        grads = jax.vmap(batch_grad)(jax.random.split(k_noise, n_probes))
+        mean_grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+        dev = jax.tree.map(
+            lambda g, m: jnp.sum((g - m[None]) ** 2, axis=tuple(range(1, g.ndim))),
+            grads, mean_grad)
+        delta2 = jnp.mean(sum(jax.tree_util.tree_leaves(dev)))
+
+        # Lipschitz secants on a full-batch-ish gradient, vmapped over the
+        # perturbation keys (one batched backward instead of a Python loop)
+        idx = jax.random.choice(k_lip, total, (lip_batch,), replace=False)
+        xb1, xb2, yb = x1[idx], x2[idx], y[idx]
+        g_base = jax.grad(loss_fn)(params, xb1, xb2, yb)
         leaves, treedef = jax.tree_util.tree_flatten(params)
-        ks = jax.random.split(k, len(leaves))
-        u = jax.tree_util.tree_unflatten(
-            treedef, [perturb * jax.random.normal(kk, p.shape, p.dtype) for kk, p in zip(ks, leaves)]
-        )
-        p2 = jax.tree.map(jnp.add, params, u)
-        g2 = grad_fn(p2, x1[idx], x2[idx], y[idx])
-        num = float(tree_norm(tree_sub(g2, g_base)))
-        den = float(tree_norm(u))
-        rho_max = max(rho_max, num / max(den, 1e-12))
 
-    F0 = float(val_fn(params, x1[: 4 * batch], x2[: 4 * batch], y[: 4 * batch]))
-    gnorm2 = float(tree_dot(g_base, g_base))
-    return {"rho": rho_max, "delta": math.sqrt(max(delta2, 1e-12)), "F0": F0,
-            "grad_norm_sq": gnorm2}
+        def secant(k):
+            ks = jax.random.split(k, len(leaves))
+            u = jax.tree_util.tree_unflatten(
+                treedef,
+                [perturb * jax.random.normal(kk, p.shape, p.dtype)
+                 for kk, p in zip(ks, leaves)])
+            g2 = jax.grad(loss_fn)(jax.tree.map(jnp.add, params, u), xb1, xb2, yb)
+            return tree_norm(tree_sub(g2, g_base)) / jnp.maximum(tree_norm(u), 1e-12)
+
+        rho = jnp.max(jax.vmap(secant)(jax.random.split(k_pert, n_perturb)))
+        F0 = loss_fn(params, xb1, xb2, yb)
+        gnorm2 = tree_dot(g_base, g_base)
+        return rho, delta2, F0, gnorm2
+
+    rho, delta2, F0, gnorm2 = jax.device_get(probe(params, x1, x2, y, key))
+    return {"rho": float(rho), "delta": math.sqrt(max(float(delta2), 1e-12)),
+            "F0": float(F0), "grad_norm_sq": float(gnorm2)}
 
 
 def recommend_settings(probe: Dict[str, float], T: int, eta: float,

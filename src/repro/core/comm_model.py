@@ -85,6 +85,16 @@ def total_comm_cost(sizes: MessageSizes, fed: FederationConfig, iterations: int)
     return comm_cost_per_iteration(sizes, fed) * iterations + sizes.raw_upfront
 
 
+def per_round_bytes(sizes: MessageSizes, P: int, Q: int, num_groups: int = 1) -> float:
+    """Modeled bytes of ONE global round (P iterations of eq. (19)) over all groups.
+
+    This is the quantity the adaptive controller's byte governor charges per
+    round when P/Q vary online.
+    """
+    fed = FederationConfig(local_interval=Q, global_interval=P)
+    return comm_cost_per_iteration(sizes, fed) * P * num_groups
+
+
 def round_time(
     sizes: MessageSizes,
     fed: FederationConfig,
@@ -96,8 +106,8 @@ def round_time(
     Devices transmit in parallel (time = one device's payload / link speed);
     hospital/cloud payloads aggregate the group's models.
     """
-    P, Q = fed.global_interval, fed.local_interval
-    lam = P // Q
+    P = fed.global_interval
+    lam = fed.lam  # FederationConfig validates P % Q == 0 (no silent flooring)
     # global aggregation: hospital uploads (θ0,θ1,θ2), cloud returns them
     up = sizes.theta0 + sizes.theta1 + sizes.theta2
     t_g = up / links.bb_up + up / links.bb_down

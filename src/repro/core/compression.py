@@ -157,6 +157,19 @@ def compress_message_sort(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp
     return y
 
 
+# (k_frac, levels) rungs ordered loosest -> tightest wire size; rung 0 is the
+# uncompressed message. The adaptive controller's byte governor walks DOWN
+# this ladder (never up within a run) until the projected bytes fit the
+# budget, so the compile-cache key set stays bounded by len(COMPRESSION_LADDER).
+COMPRESSION_LADDER = (
+    (0.0, 0),     # uncompressed
+    (0.5, 128),   # top-50% + b=128 quantization
+    (0.25, 128),  # the paper's C-HSGD operating point (§VII-A1)
+    (0.1, 128),
+    (0.05, 64),
+)
+
+
 def compressed_bytes(n_elements: int, k_frac: float, levels: int, dense_bytes_per_el: int = 4) -> float:
     """Wire size of a compressed message.
 

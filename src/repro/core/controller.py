@@ -1,0 +1,311 @@
+"""Closed-loop adaptive HSGD controller — the paper's §VI strategies, online.
+
+``AdaptiveHSGDRunner`` turns the offline one-shot formulas of
+``core/adaptive.py`` into a between-rounds control loop. Code ↔ §VI map:
+
+  Theorem 1, eq. (17)   Γ(P,Q) = 4(F−F*)/(ηT) + 12Pρηδ² + 96Q²ρ²η²δ²
+                        -> ``adaptive.convergence_bound``; the controller
+                        keeps Γ ≤ the user's target Ξ (Prop. 1's accuracy
+                        target) by shrinking P when the bound would overshoot.
+  Strategy 1 (Prop. 1)  Λ = P/Q = 1 minimizes C(P,Q) at a given Ξ
+                        -> every plan sets Q = P.
+  Strategy 2 (Prop. 2)  P* = Q* = sqrt((F − E[F_T]) / (24 ρ² η² δ² T))
+                        -> ``adaptive.strategy2_optimal_interval`` re-evaluated
+                        every round with the *remaining* iteration budget T_rem
+                        and the current loss standing in for F(θ̃⁰).
+  Strategy 3 (Prop. 3)  η* = min(η₂, 1/(8Pρ))
+                        -> ``adaptive.strategy3_learning_rate`` re-picked after
+                        every P change from the online ‖∇F‖² estimate.
+  §VI-B probes          ρ, δ estimated "with a small number of pre-training
+                        iterations" -> ``adaptive.estimate_rho_delta`` seeds
+                        the loop; afterwards each round's OWN gradients are
+                        reused (``local_sgd_step_stats``): δ² from per-worker
+                        gradient spread, ρ from within-interval secants
+                        ‖ḡ_{t+1} − ḡ_t‖ / (η‖ḡ_t‖), ‖∇F‖² from ‖ḡ‖². No
+                        extra forward passes — the probes are free.
+  Eq. (19) governor     C(P,Q)/T per-iteration wire cost
+                        -> ``comm_model.comm_cost_per_iteration`` projects the
+                        end-of-run bytes; when the projection exceeds the
+                        user's byte budget the governor tightens the message
+                        (``COMPRESSION_LADDER`` top-k/quantization rungs, then
+                        larger P = Q), never loosening within a run.
+
+Every executed round goes through ``HSGDRunner.round_fn`` — one compiled,
+state-donating executor per (P, Q, compression) bucket, so the round-varying
+schedule costs one compile per bucket (P snaps to powers of two), not one per
+round. PR 1's donation / mesh-sharding / fused-compression paths are reused
+unchanged underneath.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.common.pytree import tree_size
+from repro.core import comm_model as CM
+from repro.core.adaptive import (
+    convergence_bound,
+    estimate_rho_delta,
+    max_learning_rate,
+    strategy2_optimal_interval,
+    strategy3_learning_rate,
+)
+from repro.core.compression import COMPRESSION_LADDER, compressed_bytes
+from repro.core.hsgd import (
+    HSGDRunner,
+    HSGDState,
+    global_model,
+    place_on_mesh,
+)
+from repro.models.split_model import HybridModel
+
+
+@dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the closed loop (all byte quantities are *modeled* wire bytes
+    across ALL groups, per the eq. (19) cost model)."""
+
+    total_steps: int = 128          # T: total SGD iterations to spend
+    target_bound: float = math.inf  # Ξ: keep Γ(P,Q) ≤ this (Prop. 1 target)
+    byte_budget: float = math.inf   # honor this end-of-run byte projection
+    max_interval: int = 32          # cap on P = Q
+    eta_min: float = 1e-4
+    eta_max: float = 0.1
+    ema: float = 0.5                # probe smoothing: old*ema + new*(1-ema)
+    probe_slew: float = 4.0         # per-round cap on a probe's growth/shrink ratio
+    ladder: Tuple[Tuple[float, int], ...] = COMPRESSION_LADDER
+    init_probe: bool = True         # §VI-B pre-training probe before round 1
+    probe_batch: int = 32
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """One round's settings as picked by strategies 1–3 + the governor."""
+
+    P: int
+    Q: int
+    eta: float
+    rung: int                 # index into the compression ladder
+    gamma: float              # Γ(P,Q) at the picked settings
+    projected_bytes: float    # end-of-run byte projection at these settings
+
+
+class AdaptiveResult(NamedTuple):
+    state: HSGDState
+    losses: np.ndarray        # [total_steps]
+    history: List[Dict[str, Any]]  # one record per executed round
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << max(int(n).bit_length() - 1, 0)
+
+
+def ladder_from(compression_k: float, quant_levels: int,
+                base: Tuple[Tuple[float, int], ...] = COMPRESSION_LADDER,
+                ) -> Tuple[Tuple[float, int], ...]:
+    """Governor ladder that STARTS at an explicitly requested compression
+    setting (e.g. c-hsgd's k=0.25/b=128) and only tightens from there: the
+    user's (k, b) becomes rung 0, followed by the base rungs with strictly
+    smaller wire size. No compression requested -> the base ladder."""
+    if not (compression_k or quant_levels):
+        return base
+    n_ref = 1 << 20
+    user_bytes = compressed_bytes(n_ref, compression_k or 1.0, quant_levels)
+    tail = tuple((k, b) for k, b in base
+                 if compressed_bytes(n_ref, k or 1.0, b) < user_bytes)
+    return ((compression_k, quant_levels),) + tail
+
+
+def plan_round(
+    probe: Dict[str, float],
+    steps_done: int,
+    bytes_spent: float,
+    rung: int,
+    eta_prev: float,
+    cfg: AdaptiveConfig,
+    fed: FederationConfig,
+    sizes_of,
+) -> RoundPlan:
+    """Pure planning step: probes -> (P, Q, η, compression rung).
+
+    ``sizes_of(k_frac, levels)`` returns the per-group ``MessageSizes`` at a
+    ladder rung. Separated from the runner so the governor logic is unit-
+    testable without training anything.
+    """
+    rho = max(probe["rho"], 1e-6)
+    delta = max(probe["delta"], 1e-9)
+    F_cur = max(probe["F0"], 1e-9)
+    gnorm2 = max(probe["grad_norm_sq"], 0.0)
+    T_rem = max(cfg.total_steps - steps_done, 1)
+
+    def eta_for(P: int) -> float:
+        eta = strategy3_learning_rate(P, P, rho, delta, gnorm2)  # strategy 3
+        # the anti-stall floor yields to Theorem 1's cap 1/(8Pρ): Γ's formula
+        # (and the guard below) is only valid under η ≤ that cap
+        floor = min(cfg.eta_min, max_learning_rate(P, rho))
+        return min(max(eta, floor), cfg.eta_max)
+
+    def gamma(P: int, eta: float) -> float:
+        return convergence_bound(F_cur, 0.0, rho, delta, eta, P, P, T_rem)
+
+    def projected(P: int, rung: int) -> float:
+        k, b = cfg.ladder[rung]
+        per_iter = CM.comm_cost_per_iteration(
+            sizes_of(k, b),
+            FederationConfig(local_interval=P, global_interval=P),
+        ) * fed.num_groups
+        return bytes_spent + per_iter * T_rem
+
+    # strategies 2 + 1: optimal sync interval, with Q = P
+    P = strategy2_optimal_interval(F_cur, rho, delta, eta_prev, T_rem)
+    P = _pow2_floor(max(1, min(P, cfg.max_interval, T_rem)))
+    eta = eta_for(P)
+
+    # Theorem-1 guard: Γ grows with P at fixed η, so shrink P until Γ ≤ Ξ
+    while P > 1 and gamma(P, eta) > cfg.target_bound:
+        P //= 2
+        eta = eta_for(P)
+
+    # byte governor: tighten the message until the projection fits the budget
+    while projected(P, rung) > cfg.byte_budget and rung < len(cfg.ladder) - 1:
+        rung += 1
+    # tightest rung still over budget -> amortize harder with a larger P = Q,
+    # as long as the Theorem-1 target allows it
+    while (projected(P, rung) > cfg.byte_budget
+           and 2 * P <= min(cfg.max_interval, T_rem)
+           and gamma(2 * P, eta_for(2 * P)) <= cfg.target_bound):
+        P *= 2
+        eta = eta_for(P)
+
+    return RoundPlan(P=P, Q=P, eta=eta, rung=rung,
+                     gamma=gamma(P, eta), projected_bytes=projected(P, rung))
+
+
+class AdaptiveHSGDRunner:
+    """Closed-loop trainer: plan -> run one compiled round -> re-probe."""
+
+    def __init__(
+        self,
+        model: HybridModel,
+        fed: FederationConfig,
+        train: TrainConfig,
+        cfg: Optional[AdaptiveConfig] = None,
+        do_global_agg: bool = True,
+        fused_compression: bool = True,
+    ):
+        self.model, self.fed, self.train = model, fed, train
+        self.cfg = cfg or AdaptiveConfig()
+        self.runner = HSGDRunner(model, fed, train, do_global_agg=do_global_agg,
+                                 fused_compression=fused_compression)
+
+    # -- comm-model plumbing -------------------------------------------------
+
+    def _sizes_of(self, state: HSGDState):
+        """Returns sizes_of(k, levels) -> per-group MessageSizes for the
+        governor, with z1/z2 element counts read off the live exchange
+        buffers (per group = total / M)."""
+        M = self.fed.num_groups
+        params_shapes = {
+            "theta0": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta0),
+            "theta1": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta1),
+            "theta2": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), state.theta2),
+        }
+        z1_el = tree_size(state.stale["z1"]) // M
+        z2_el = tree_size(state.stale["z2"]) // M
+
+        def sizes_of(k_frac: float, levels: int):
+            return CM.message_sizes(params_shapes, z1_el, z2_el,
+                                    self.fed.sampled_devices, k_frac, levels)
+
+        return sizes_of
+
+    # -- probe handling ------------------------------------------------------
+
+    def _update_probe(self, probe: Dict[str, float], stats, Q: int) -> Dict[str, float]:
+        loss = np.asarray(stats["loss"])
+        rho = np.asarray(stats["rho"])
+        ok = np.asarray(stats["rho_ok"]) > 0.5
+        new = {
+            "F0": float(np.mean(loss[-Q:])),
+            "delta": float(np.sqrt(max(float(np.mean(np.asarray(stats["delta2"]))), 1e-16))),
+            "grad_norm_sq": float(np.mean(np.asarray(stats["gnorm2"]))),
+            # median valid secant ≈ local Lipschitz constant along the
+            # trajectory (median, not max: a single staleness spike must not
+            # collapse η through the 1/(8Pρ) cap). Q=1 rounds have no
+            # within-interval pair — keep the EMA standing.
+            "rho": float(np.median(rho[ok])) if ok.any() else probe["rho"],
+        }
+        e, slew = self.cfg.ema, self.cfg.probe_slew
+        out = {}
+        for k in probe:
+            v = e * probe[k] + (1.0 - e) * new[k]
+            if slew > 1.0 and probe[k] > 0:  # trust region: bounded per-round drift
+                v = min(max(v, probe[k] / slew), probe[k] * slew)
+            out[k] = v
+        return out
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, state: HSGDState, data, group_weights, mesh=None,
+            probe_key=None) -> AdaptiveResult:
+        """Drive ``cfg.total_steps`` SGD iterations adaptively.
+
+        Donates ``state`` round-by-round (rebind the returned state). Returns
+        per-step losses and a per-round history of every decision the
+        controller took (P, Q, η, rung, Γ, probes, modeled bytes).
+        """
+        fed, cfg = self.fed, self.cfg
+        state, data, group_weights = place_on_mesh(state, data, group_weights, mesh)
+        sizes_of = self._sizes_of(state)
+
+        if cfg.init_probe:
+            key = probe_key if probe_key is not None else jax.random.PRNGKey(0)
+            probe = estimate_rho_delta(self.model, global_model(state, group_weights),
+                                       data, key, batch=cfg.probe_batch)
+        else:  # neutral seed: first plan degenerates to P = Q = 1
+            probe = {"rho": 1.0, "delta": 1.0, "F0": 1.0, "grad_norm_sq": 1.0}
+
+        losses: List[np.ndarray] = []
+        history: List[Dict[str, Any]] = []
+        steps_done, bytes_spent, rung = 0, 0.0, 0
+        eta_prev = self.train.learning_rate
+
+        while steps_done < cfg.total_steps:
+            plan = plan_round(probe, steps_done, bytes_spent, rung,
+                              eta_prev, cfg, fed, sizes_of)
+            rung = plan.rung  # the ladder is a ratchet: never loosened
+            k_frac, levels = cfg.ladder[rung]
+            fn = self.runner.round_fn(plan.P, plan.Q, k_frac, levels,
+                                      collect_stats=True)
+            state, stats = fn(state, data, group_weights, plan.eta)
+            stats = jax.device_get(stats)
+
+            round_bytes = CM.per_round_bytes(
+                sizes_of(k_frac, levels), plan.P, plan.Q, fed.num_groups)
+            bytes_spent += round_bytes
+            steps_done += plan.P
+            eta_prev = plan.eta
+            losses.append(np.asarray(stats["loss"]))
+            history.append({
+                "round": len(history), "P": plan.P, "Q": plan.Q,
+                "eta": plan.eta, "rung": rung,
+                "compression_k": k_frac, "quant_levels": levels,
+                "gamma": plan.gamma, "target_bound": cfg.target_bound,
+                "rho": probe["rho"], "delta": probe["delta"],
+                "grad_norm_sq": probe["grad_norm_sq"], "F0": probe["F0"],
+                "round_bytes": round_bytes, "bytes_total": bytes_spent,
+                "projected_bytes": plan.projected_bytes,
+                "steps_done": steps_done,
+                "loss_last": float(np.asarray(stats["loss"])[-1]),
+            })
+            probe = self._update_probe(probe, stats, plan.Q)
+
+        return AdaptiveResult(state, np.concatenate(losses), history)

@@ -19,15 +19,16 @@ their state never influences the trajectory.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.common.config import FederationConfig, TrainConfig
+from repro.common.pytree import tree_dot, tree_norm, tree_sub
 from repro.core import federation as F
 from repro.core.compression import compress_message_sort
 from repro.models.split_model import HybridModel
@@ -112,8 +113,9 @@ def _device_loss(model, theta2_n, x2_n, y_n, stale_theta0_m, stale_z1_n):
     )
 
 
-def local_sgd_step(model: HybridModel, state: HSGDState, lr) -> Tuple[HSGDState, jnp.ndarray]:
-    """One iteration of lines 22–26 for every group and sampled device."""
+def _local_grads(model: HybridModel, state: HSGDState):
+    """Per-worker gradients of lines 22–26: (losses [M], g0 [M,...], g1 [M,...],
+    g2 [M,A,...]). Shared by the plain step and the probe-collecting step."""
 
     def h_loss(t0_m, t1_m, b_m, z2_m):
         return _hospital_loss(model, t0_m, t1_m, b_m, z2_m)
@@ -132,13 +134,62 @@ def local_sgd_step(model: HybridModel, state: HSGDState, lr) -> Tuple[HSGDState,
     g2 = jax.vmap(per_device)(  # over groups
         state.theta2, state.batch["x2"], state.batch["y"], state.stale["theta0"], state.stale["z1"]
     )
+    return losses, g0, g1, g2
 
+
+def _apply_sgd(state: HSGDState, lr, g0, g1, g2) -> HSGDState:
     upd = lambda p, g: p - lr * g.astype(p.dtype)
-    theta0 = jax.tree.map(upd, state.theta0, g0)
-    theta1 = jax.tree.map(upd, state.theta1, g1)
-    theta2 = jax.tree.map(upd, state.theta2, g2)
-    new_state = state._replace(theta0=theta0, theta1=theta1, theta2=theta2, step=state.step + 1)
-    return new_state, jnp.mean(losses)
+    return state._replace(
+        theta0=jax.tree.map(upd, state.theta0, g0),
+        theta1=jax.tree.map(upd, state.theta1, g1),
+        theta2=jax.tree.map(upd, state.theta2, g2),
+        step=state.step + 1,
+    )
+
+
+def local_sgd_step(model: HybridModel, state: HSGDState, lr) -> Tuple[HSGDState, jnp.ndarray]:
+    """One iteration of lines 22–26 for every group and sampled device."""
+    losses, g0, g1, g2 = _local_grads(model, state)
+    return _apply_sgd(state, lr, g0, g1, g2), jnp.mean(losses)
+
+
+def _worker_dev2(g, gbar, lead: int):
+    """Σ_leaves ||g_worker − ḡ||² per worker: [M, ...]→[M] (lead=1) or
+    [M, A, ...]→[M, A] (lead=2)."""
+    per = jax.tree.map(
+        lambda x, m: jnp.sum((x - m.reshape((1,) * lead + m.shape)) ** 2,
+                             axis=tuple(range(lead, x.ndim))), g, gbar)
+    return sum(jax.tree_util.tree_leaves(per))
+
+
+def local_sgd_step_stats(
+    model: HybridModel, state: HSGDState, lr, group_weights
+) -> Tuple[HSGDState, jnp.ndarray, Dict[str, Any]]:
+    """``local_sgd_step`` + the §VI-B online probe statistics, reusing the
+    step's own gradients (no extra forward/backward passes):
+
+      gbar    — the global-gradient proxy ∇F(θ̃): weighted group mean of
+                (g0, g1) and of the device means of g2 (eqs. (1)/(2) applied
+                to gradients instead of parameters);
+      gnorm2  — ‖gbar‖² (strategy 3's ‖∇F‖² input);
+      delta2  — mean squared deviation of per-worker gradients around gbar
+                (Assumption 2's δ² estimator).
+    """
+    losses, g0, g1, g2 = _local_grads(model, state)
+    gbar = {
+        "theta0": F.global_aggregate(g0, group_weights),
+        "theta1": F.global_aggregate(g1, group_weights),
+        "theta2": F.global_aggregate(F.local_aggregate(g2), group_weights),
+    }
+    gnorm2 = tree_dot(gbar, gbar)
+    delta2 = (
+        jnp.mean(_worker_dev2(g0, gbar["theta0"], 1)
+                 + _worker_dev2(g1, gbar["theta1"], 1))
+        + jnp.mean(_worker_dev2(g2, gbar["theta2"], 2))
+    )
+    new_state = _apply_sgd(state, lr, g0, g1, g2)
+    aux = {"gbar": gbar, "gnorm2": gnorm2, "delta2": delta2}
+    return new_state, jnp.mean(losses), aux
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +288,28 @@ def state_shardings(state: HSGDState, mesh: Mesh, rules=None) -> HSGDState:
     )
 
 
+def _global_grad_zeros(state: HSGDState):
+    """Zero template shaped like the global-gradient proxy (one model copy)."""
+    return {
+        "theta0": jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype), state.theta0),
+        "theta1": jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype), state.theta1),
+        "theta2": jax.tree.map(lambda x: jnp.zeros(x.shape[2:], x.dtype), state.theta2),
+    }
+
+
+def place_on_mesh(state: HSGDState, data, group_weights, mesh: Optional[Mesh]):
+    """Shard (state, data, weights) for a non-trivial mesh; no-op otherwise."""
+    if mesh is None or mesh.devices.size <= 1:
+        return state, data, group_weights
+    from repro.common.sharding import group_sharding
+
+    state = jax.device_put(state, state_shardings(state, mesh))
+    data = jax.device_put(
+        data, jax.tree.map(lambda x: group_sharding(x.shape, mesh), data))
+    group_weights = jax.device_put(group_weights, NamedSharding(mesh, P()))
+    return state, data, group_weights
+
+
 @dataclass(frozen=True)
 class HSGDRunner:
     """Compiled HSGD trainer for a (model, federation, train) configuration.
@@ -247,6 +320,13 @@ class HSGDRunner:
     Passing a non-trivial ``mesh`` shards every leading group axis over the
     mesh's horizontal axes, lowering the eq. (1)/(2) aggregations and
     broadcasts to collectives instead of replicated gathers.
+
+    The adaptive controller drives single rounds through ``round_fn``, which
+    stages the scan lengths per (P, Q, compression) bucket: each bucket
+    compiles once into a donating jitted executor and is cached, so a run
+    whose intervals vary round-to-round pays one compile per distinct bucket
+    instead of one per round. η stays a traced scalar — re-picking the
+    learning rate never recompiles.
     """
 
     model: HybridModel
@@ -254,31 +334,104 @@ class HSGDRunner:
     train: TrainConfig
     do_global_agg: bool = True  # False reproduces TDCD's missing phase
     fused_compression: bool = True  # False keeps the pre-fusion sort path
+    # (P, Q, k, b, collect) bucket -> compiled round executor
+    _round_cache: Dict = field(default_factory=dict, compare=False, repr=False)
 
-    def _round(self, state: HSGDState, data, group_weights, lr_fn):
+    def _round_impl(self, state: HSGDState, data, group_weights,
+                    lr: Union[Callable, jnp.ndarray, float],
+                    Q: int, lam: int, compression_k: float, quant_levels: int,
+                    collect: bool):
+        """One global round with staged scan lengths (Λ intervals × Q steps).
+
+        ``lr`` is either a step->η schedule (fixed-interval ``run`` path) or a
+        traced scalar (adaptive path). With ``collect`` the inner scan carries
+        the previous step's global-gradient proxy and emits per-step probe
+        stats; ρ secants pair consecutive steps *within* an interval only
+        (same batch ⇒ a clean Lipschitz quotient), so Q = 1 rounds yield no ρ
+        samples and the controller keeps its EMA.
+        """
         fed, model = self.fed, self.model
-        Q, lam = fed.local_interval, fed.lam
-
         if self.do_global_agg:
             state = global_aggregation(state, fed, group_weights)
+        lr_of = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+        do_exchange = partial(
+            exchange, model, data=data, fed=fed,
+            compression_k=compression_k, quant_levels=quant_levels,
+            fused=self.fused_compression,
+        )
+
+        if not collect:
+            def interval(state, _):
+                state = do_exchange(state)
+
+                def sgd_step(state, _):
+                    state, loss = local_sgd_step(model, state, lr_of(state.step))
+                    return state, loss
+
+                state, losses = jax.lax.scan(sgd_step, state, None, length=Q)
+                return state, losses
+
+            state, losses = jax.lax.scan(interval, state, None, length=lam)
+            return state, losses.reshape(-1)
+
+        zeros_g = _global_grad_zeros(state)
 
         def interval(state, _):
-            state = exchange(
-                model, state, data, fed,
-                self.train.compression_k, self.train.quantization_bits,
-                fused=self.fused_compression,
-            )
+            state = do_exchange(state)
 
-            def sgd_step(state, _):
-                lr = lr_fn(state.step)
-                state, loss = local_sgd_step(model, state, lr)
-                return state, loss
+            def sgd_step(carry, _):
+                state, prev_g, prev_ok = carry
+                lr_t = lr_of(state.step)
+                state, loss, aux = local_sgd_step_stats(model, state, lr_t, group_weights)
+                diff = tree_norm(tree_sub(aux["gbar"], prev_g))
+                den = lr_t * tree_norm(prev_g)
+                rho = jnp.where(prev_ok > 0.5, diff / jnp.maximum(den, 1e-12), 0.0)
+                stats = {"loss": loss, "gnorm2": aux["gnorm2"],
+                         "delta2": aux["delta2"], "rho": rho, "rho_ok": prev_ok}
+                return (state, aux["gbar"], jnp.ones((), jnp.float32)), stats
 
-            state, losses = jax.lax.scan(sgd_step, state, None, length=Q)
-            return state, losses
+            (state, _, _), stats = jax.lax.scan(
+                sgd_step, (state, zeros_g, jnp.zeros((), jnp.float32)), None, length=Q)
+            return state, stats
 
-        state, losses = jax.lax.scan(interval, state, None, length=lam)
-        return state, losses.reshape(-1)
+        state, stats = jax.lax.scan(interval, state, None, length=lam)
+        stats = jax.tree.map(lambda x: x.reshape(-1), stats)  # [Λ, Q] -> [P]
+        return state, stats
+
+    def _round(self, state: HSGDState, data, group_weights, lr_fn):
+        return self._round_impl(
+            state, data, group_weights, lr_fn,
+            self.fed.local_interval, self.fed.lam,
+            self.train.compression_k, self.train.quantization_bits,
+            collect=False,
+        )
+
+    def round_fn(self, P: int, Q: int, compression_k: Optional[float] = None,
+                 quant_levels: Optional[int] = None, collect_stats: bool = True):
+        """Compiled single-round executor for a (P, Q, compression) bucket.
+
+        fn(state, data, group_weights, lr) -> (state, stats) with stats a dict
+        of [P] per-step arrays (loss/gnorm2/delta2/rho/rho_ok) when
+        ``collect_stats``, else (state, losses [P]). Donates ``state`` like
+        ``run``. Cached per bucket — the adaptive controller's round-varying
+        (P, Q, k, b) settings compile once each.
+        """
+        if P < 1 or Q < 1 or P % Q:
+            raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
+        k = self.train.compression_k if compression_k is None else compression_k
+        b = self.train.quantization_bits if quant_levels is None else quant_levels
+        key = (P, Q, k, b, collect_stats)
+        fn = self._round_cache.get(key)
+        if fn is None:
+            lam = P // Q
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(state, data, group_weights, lr):
+                return self._round_impl(state, data, group_weights, lr,
+                                        Q, lam, k, b, collect_stats)
+
+            self._round_cache[key] = fn
+        return fn
 
     def run(self, state: HSGDState, data, group_weights, rounds: int,
             mesh: Optional[Mesh] = None):
@@ -287,14 +440,7 @@ class HSGDRunner:
         Donates ``state`` (no double-buffering of the [M, A, ...] pytree).
         """
         lr_fn = halving_schedule(self.train.learning_rate, self.train.lr_halve_every)
-
-        if mesh is not None and mesh.devices.size > 1:
-            from repro.common.sharding import group_sharding
-
-            state = jax.device_put(state, state_shardings(state, mesh))
-            data = jax.device_put(
-                data, jax.tree.map(lambda x: group_sharding(x.shape, mesh), data))
-            group_weights = jax.device_put(group_weights, NamedSharding(mesh, P()))
+        state, data, group_weights = place_on_mesh(state, data, group_weights, mesh)
 
         @partial(jax.jit, donate_argnums=(0,))
         def go(state, data, group_weights):

@@ -38,6 +38,29 @@ def evaluate_global(model: HybridModel, params, x1, x2, y, batch: int = 512) -> 
     return out
 
 
+def smoothed_losses(losses, window: int = 4) -> np.ndarray:
+    """Trailing-mean smoothing of a per-step loss curve (window clamped to
+    the prefix length at the start, so output[i] averages steps max(0, i-w+1)..i)."""
+    losses = np.asarray(losses, np.float64)
+    w = max(1, int(window))
+    c = np.cumsum(np.concatenate([[0.0], losses]))
+    idx = np.arange(1, len(losses) + 1)
+    lo = np.maximum(idx - w, 0)
+    return (c[idx] - c[lo]) / (idx - lo)
+
+
+def steps_to_target(losses, target: float, window: int = 4):
+    """First step index whose smoothed loss reaches ``target``; None if never.
+
+    The bytes-to-target-loss metric of the adaptive benchmarks (paper Fig. 7's
+    'communication cost to reach a target accuracy', in miniature) indexes a
+    cumulative-bytes curve with this.
+    """
+    sm = smoothed_losses(losses, window)
+    hits = np.flatnonzero(sm <= target)
+    return int(hits[0]) if len(hits) else None
+
+
 def _logsumexp(x):
     m = np.max(x, axis=-1, keepdims=True)
     return m + np.log(np.sum(np.exp(x - m), axis=-1, keepdims=True))

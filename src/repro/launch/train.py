@@ -25,8 +25,8 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.common.config import FederationConfig, TrainConfig, get_config
 from repro.core import metrics as MET
-from repro.core.adaptive import estimate_rho_delta, recommend_settings
 from repro.core.baselines import make_runner, merge_groups_for_tdcd
+from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner, ladder_from
 from repro.core.hsgd import global_model, init_state, make_group_weights
 from repro.data.partition import hybrid_partition
 from repro.data.synthetic import DATASETS, flatten_for_tower, make_dataset, vertical_split
@@ -74,15 +74,31 @@ def run_ehealth(args) -> dict:
     else:
         state = init_state(key, model, eff_fed, data)
 
-    if args.adaptive:
-        params0 = model.init(jax.random.PRNGKey(args.seed))
-        probe = estimate_rho_delta(model, params0, data, jax.random.PRNGKey(1))
-        rec = recommend_settings(probe, args.rounds * fed.global_interval, args.lr, fed)
-        print(f"[adaptive] probe={probe}")
-        print(f"[adaptive] recommended P=Q={rec['P']} eta={rec['eta']:.4g}")
-
+    history = None
     t0 = time.time()
-    state, losses = runner.run(state, data, w, rounds=args.rounds)
+    if args.adaptive:
+        if algo not in ("hsgd", "c-hsgd"):
+            raise SystemExit(f"--adaptive drives the HSGD loop; got --algorithm {algo}")
+        eff_train = runner.train  # c-hsgd defaults (k=0.25, b=128) applied
+        acfg = AdaptiveConfig(
+            total_steps=args.rounds * fed.global_interval,
+            target_bound=args.target_bound,
+            byte_budget=args.byte_budget_mb * 1e6,
+            max_interval=args.max_interval,
+            eta_max=max(args.lr * 10, 0.05),
+            # explicit --compression-k/--quantization (or c-hsgd defaults)
+            # become the governor's rung 0 — never silently loosened
+            ladder=ladder_from(eff_train.compression_k, eff_train.quantization_bits),
+        )
+        controller = AdaptiveHSGDRunner(model, fed, eff_train, acfg)
+        state, losses, history = controller.run(
+            state, data, w, probe_key=jax.random.PRNGKey(args.seed + 1))
+        for h in history:
+            print(f"[adaptive] round {h['round']:3d}: P=Q={h['P']:3d} "
+                  f"eta={h['eta']:.4g} rung={h['rung']} Γ={h['gamma']:.3g} "
+                  f"bytes={h['bytes_total'] / 1e6:.2f}MB loss={h['loss_last']:.4f}")
+    else:
+        state, losses = runner.run(state, data, w, rounds=args.rounds)
     dt = time.time() - t0
     gm = runner.global_model(state, w) if algo == "jfl" else global_model(state, w)
 
@@ -93,6 +109,10 @@ def run_ehealth(args) -> dict:
     m["train_loss_final"] = float(losses[-1])
     m["steps"] = int(len(losses))
     m["wall_s"] = round(dt, 2)
+    if history is not None:
+        m["adaptive_rounds"] = len(history)
+        m["adaptive_bytes_total"] = history[-1]["bytes_total"]
+        m["adaptive_final_PQ"] = history[-1]["P"]
     print(json.dumps(m, indent=1))
     if args.checkpoint:
         save_checkpoint(args.checkpoint, gm, step=len(losses), extra={"metrics": m})
@@ -161,7 +181,15 @@ def main(argv=None):
     ap.add_argument("--lr-halve-every", type=int, default=0)
     ap.add_argument("--compression-k", type=float, default=0.0)
     ap.add_argument("--quantization", type=int, default=0)
-    ap.add_argument("--adaptive", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="closed-loop §VI controller: re-picks P/Q/eta and "
+                         "tightens compression online (hsgd/c-hsgd only)")
+    ap.add_argument("--byte-budget-mb", type=float, default=float("inf"),
+                    help="modeled comm budget for the whole run, MB (all groups)")
+    ap.add_argument("--target-bound", type=float, default=float("inf"),
+                    help="Theorem-1 target Ξ the controller keeps Γ(P,Q) under")
+    ap.add_argument("--max-interval", type=int, default=32,
+                    help="cap on the adaptive P = Q")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

@@ -1,0 +1,245 @@
+"""Closed-loop adaptive controller: governor logic, compile-cache staging,
+probe plumbing, and the paper's Fig. 7 claim in miniature (slow)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import comm_model as CM
+from repro.core.adaptive import estimate_rho_delta
+from repro.core.compression import COMPRESSION_LADDER
+from repro.core.controller import (
+    AdaptiveConfig,
+    AdaptiveHSGDRunner,
+    ladder_from,
+    plan_round,
+)
+from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
+from repro.core.metrics import smoothed_losses
+from repro.data.partition import hybrid_partition
+from repro.data.synthetic import MIMIC3, ORGANAMNIST, make_dataset
+from repro.models.split_model import cnn_hybrid, lstm_hybrid
+
+
+def _mini_cnn(M=2, K=8, q=2, p=4):
+    fed = FederationConfig(num_groups=M, devices_per_group=K, alpha=0.5,
+                           local_interval=q, global_interval=p)
+    X, y = make_dataset(ORGANAMNIST, M * K, seed=0)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    return cnn_hybrid(h_rows=11), fed, data
+
+
+def _sizes_of_const(k_frac, levels):
+    """Constant message sizes for pure planning tests."""
+    n = 10_000
+    comp = CM.compressed_bytes(n, k_frac or 1.0, levels) if (k_frac or levels) else n * 4
+    return CM.MessageSizes(theta0=comp, theta1=4e4, theta2=1e4,
+                           z1=comp / 10, z2=comp / 10, n_active=4)
+
+
+PROBE = {"rho": 2.0, "delta": 0.5, "F0": 1.0, "grad_norm_sq": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# plan_round: strategies + governor (pure, no training)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_byte_governor_tightens_to_fit_budget():
+    fed = FederationConfig(num_groups=4)
+    cfg = AdaptiveConfig(total_steps=100, byte_budget=1.0)  # impossible budget
+    plan = plan_round(PROBE, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const)
+    assert plan.rung == len(COMPRESSION_LADDER) - 1  # ratcheted to tightest
+
+    cfg = AdaptiveConfig(total_steps=100, byte_budget=math.inf)
+    plan = plan_round(PROBE, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const)
+    assert plan.rung == 0  # no pressure, message stays uncompressed
+
+
+def test_plan_governor_projection_monotone_in_rung():
+    """Each ladder rung strictly shrinks the projected bill (sanity of the
+    ladder ordering the ratchet relies on)."""
+    fed = FederationConfig(num_groups=4)
+    per_iter = [CM.comm_cost_per_iteration(_sizes_of_const(k, b),
+                                           FederationConfig(local_interval=2,
+                                                            global_interval=2))
+                for k, b in COMPRESSION_LADDER]
+    assert all(b < a for a, b in zip(per_iter, per_iter[1:]))
+
+
+def test_ladder_from_user_compression():
+    """An explicitly requested (k, b) becomes rung 0 and the ladder only ever
+    tightens from it (the c-hsgd --adaptive contract)."""
+    lad = ladder_from(0.25, 128)
+    assert lad[0] == (0.25, 128)
+    n = 1 << 20
+    wire = [CM.compressed_bytes(n, k or 1.0, b) for k, b in lad]
+    assert all(b < a for a, b in zip(wire, wire[1:]))  # strictly tighter
+    assert ladder_from(0.0, 0) == COMPRESSION_LADDER  # no request -> default
+
+
+def test_eta_floor_yields_to_theorem_cap():
+    """cfg.eta_min must not push η above 1/(8Pρ) — the Γ guard's formula is
+    only valid under Theorem 1's step-size condition."""
+    from repro.core.adaptive import max_learning_rate
+
+    fed = FederationConfig(num_groups=4)
+    probe = dict(PROBE, rho=50.0)  # cap at P=32: 1/(8*32*50) ≈ 7.8e-5 < eta_min
+    cfg = AdaptiveConfig(total_steps=1000, max_interval=32, eta_min=1e-3)
+    plan = plan_round(probe, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const)
+    assert plan.eta <= max_learning_rate(plan.P, probe["rho"]) * (1 + 1e-12)
+
+
+def test_plan_theorem1_guard_shrinks_interval():
+    fed = FederationConfig(num_groups=4)
+    loose = AdaptiveConfig(total_steps=1000, target_bound=math.inf, max_interval=64)
+    tight = AdaptiveConfig(total_steps=1000, target_bound=1e-6, max_interval=64)
+    p_loose = plan_round(PROBE, 0, 0.0, 0, 0.01, loose, fed, _sizes_of_const)
+    p_tight = plan_round(PROBE, 0, 0.0, 0, 0.01, tight, fed, _sizes_of_const)
+    assert p_tight.P <= p_loose.P
+    assert p_tight.P == 1  # an unreachable Ξ degrades to per-step sync
+
+
+def test_plan_respects_caps_and_strategy1():
+    fed = FederationConfig(num_groups=4)
+    cfg = AdaptiveConfig(total_steps=6, max_interval=64)
+    plan = plan_round(PROBE, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const)
+    assert plan.Q == plan.P  # strategy 1: Λ = 1
+    assert plan.P <= 6  # never overshoots the remaining step budget
+    assert plan.P & (plan.P - 1) == 0  # power-of-two bucket
+    assert cfg.eta_min <= plan.eta <= cfg.eta_max
+
+
+# ---------------------------------------------------------------------------
+# round_fn: per-(P,Q,k,b) staging
+# ---------------------------------------------------------------------------
+
+
+def test_round_fn_compile_cache_and_validation():
+    model, fed, data = _mini_cnn()
+    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.02))
+    f1 = runner.round_fn(4, 2, 0.25, 128)
+    assert runner.round_fn(4, 2, 0.25, 128) is f1  # bucket cached
+    assert runner.round_fn(4, 4, 0.25, 128) is not f1
+    assert runner.round_fn(4, 2, 0.0, 0) is not f1
+    with pytest.raises(ValueError):
+        runner.round_fn(4, 3)  # P not a multiple of Q
+    with pytest.raises(ValueError):
+        runner.round_fn(0, 1)
+
+
+def test_round_fn_matches_fixed_run():
+    """The staged one-round executor is the same computation as run(rounds=1)
+    at the same (P, Q, η) — the adaptive path can't silently diverge."""
+    model, fed, data = _mini_cnn()
+    train = TrainConfig(learning_rate=0.02)
+    runner = HSGDRunner(model, fed, train)
+    w = make_group_weights(data)
+    s1 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    _, l_run = runner.run(s1, data, w, rounds=1)
+    fn = runner.round_fn(fed.global_interval, fed.local_interval,
+                         collect_stats=False)
+    _, l_round = fn(s2, data, w, train.learning_rate)
+    np.testing.assert_allclose(np.asarray(l_run), np.asarray(l_round), rtol=1e-6)
+
+
+def test_round_fn_stats_shapes_and_rho_validity():
+    model, fed, data = _mini_cnn(q=2, p=4)
+    runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.02))
+    w = make_group_weights(data)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    fn = runner.round_fn(4, 2, collect_stats=True)
+    state, stats = fn(state, data, w, 0.02)
+    assert {"loss", "gnorm2", "delta2", "rho", "rho_ok"} <= set(stats)
+    for v in stats.values():
+        assert np.asarray(v).shape == (4,)
+    ok = np.asarray(stats["rho_ok"])
+    # Q=2 intervals: first step of each interval has no within-interval pair
+    np.testing.assert_array_equal(ok, [0.0, 1.0, 0.0, 1.0])
+    assert (np.asarray(stats["rho"])[ok > 0.5] > 0).all()
+    assert (np.asarray(stats["delta2"]) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# controller loop
+# ---------------------------------------------------------------------------
+
+
+def test_controller_accounting_and_ratchet():
+    model, fed, data = _mini_cnn()
+    w = make_group_weights(data)
+    cfg = AdaptiveConfig(total_steps=12, byte_budget=1e6, max_interval=4,
+                         init_probe=False)
+    ctl = AdaptiveHSGDRunner(model, fed, TrainConfig(learning_rate=0.02), cfg)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    state, losses, history = ctl.run(state, data, w)
+    assert len(losses) == cfg.total_steps
+    assert sum(h["P"] for h in history) == cfg.total_steps
+    assert all(h["Q"] == h["P"] for h in history)  # strategy 1 throughout
+    bytes_curve = [h["bytes_total"] for h in history]
+    assert all(b > a for a, b in zip(bytes_curve, bytes_curve[1:]))  # cumulative
+    rungs = [h["rung"] for h in history]
+    assert all(b >= a for a, b in zip(rungs, rungs[1:]))  # ladder is a ratchet
+    assert np.isfinite(losses).all()
+
+
+def test_estimate_rho_delta_batch_guard():
+    """batch > M*K used to crash jax.random.choice(replace=False); now the
+    probe clamps to the population size."""
+    model, fed, data = _mini_cnn(M=2, K=4)  # only 8 samples
+    params = model.init(jax.random.PRNGKey(0))
+    probe = estimate_rho_delta(model, params, data, jax.random.PRNGKey(1),
+                               n_probes=3, batch=64)
+    assert probe["rho"] > 0 and probe["F0"] > 0
+    assert math.isfinite(probe["delta"]) and math.isfinite(probe["grad_norm_sq"])
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 in miniature (slow): same step budget, better loss, fewer bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_adaptive_matches_fixed_loss_with_fewer_bytes():
+    """Seeded regression of the paper's headline claim: the closed-loop
+    controller reaches the fixed-(P=Q=1) baseline's loss while spending
+    strictly less modeled communication."""
+    steps = 24
+    fed = FederationConfig(num_groups=2, devices_per_group=16, alpha=0.25,
+                           local_interval=1, global_interval=1)
+    train = TrainConfig(learning_rate=0.01)
+    X, y = make_dataset(MIMIC3, 256, seed=0)
+    fd = hybrid_partition(MIMIC3, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    model = lstm_hybrid(n_features=76, hospital_features=36,
+                        n_classes=MIMIC3.n_classes)
+    w = make_group_weights(data)
+
+    # fixed baseline + its modeled bill
+    runner = HSGDRunner(model, fed, train)
+    s = init_state(jax.random.PRNGKey(0), model, fed, data)
+    s, fixed_losses = runner.run(s, data, w, rounds=steps)
+    fixed_losses = np.asarray(jax.device_get(fixed_losses))
+    params = model.init(jax.random.PRNGKey(0))
+    z_el = fed.sampled_devices * 64
+    sizes = CM.message_sizes(params, z_el, z_el, fed.sampled_devices)
+    fixed_bytes = CM.comm_cost_per_iteration(sizes, fed) * fed.num_groups * steps
+
+    # adaptive under half the fixed bill
+    cfg = AdaptiveConfig(total_steps=steps, byte_budget=0.5 * fixed_bytes,
+                         max_interval=8, eta_max=0.05)
+    ctl = AdaptiveHSGDRunner(model, fed, train, cfg)
+    s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+    s2, ad_losses, history = ctl.run(s2, data, w,
+                                     probe_key=jax.random.PRNGKey(1))
+    ad_bytes = history[-1]["bytes_total"]
+
+    fixed_final = float(smoothed_losses(fixed_losses, 4)[-1])
+    ad_final = float(smoothed_losses(ad_losses, 4)[-1])
+    assert ad_final <= fixed_final  # (a) at least the baseline's quality
+    assert ad_bytes < fixed_bytes  # (b) strictly cheaper, modeled via eq. (19)

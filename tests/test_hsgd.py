@@ -154,44 +154,83 @@ def test_state_shardings_group_axis_and_replicated_scalars():
     assert sh.step.spec == () or all(s is None for s in sh.step.spec)
 
 
-@pytest.mark.slow
-def test_group_sharded_run_subprocess():
-    """Run HSGD with M=2 groups sharded over a data=2 mesh of 2 fake host
-    devices; losses must match the single-device run (device count must be
-    set before jax init, hence the subprocess)."""
+# ---------------------------------------------------------------------------
+# Sharded-exchange test matrix: {2, 4} fake devices × {compression on, off}
+# × {do_global_agg on, off}. The device count must be fixed before jax
+# initializes, hence ONE subprocess per device count (memoized) that runs all
+# four configs and reports plain-vs-mesh loss curves as JSON; the parametrized
+# tests then assert each combo to fp32 tolerance.
+# ---------------------------------------------------------------------------
+
+_SHARDED_MATRIX_CACHE = {}
+
+_SHARDED_MATRIX_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(n_dev)d"
+import sys, json
+sys.path.insert(0, os.path.join(%(repo)r, "src"))
+sys.path.insert(0, %(repo)r)
+import jax, numpy as np
+from tests.test_hsgd import _mini
+from repro.common.config import TrainConfig
+from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
+model, fed, data = _mini(M=4)  # M=4 divides both mesh sizes -> genuinely sharded
+w = make_group_weights(data)
+mesh = jax.make_mesh((%(n_dev)d, 1), ("data", "model"))
+out = {}
+for compression in (False, True):
+    for do_agg in (False, True):
+        train = TrainConfig(learning_rate=0.02,
+                            compression_k=0.25 if compression else 0.0,
+                            quantization_bits=128 if compression else 0)
+        runner = HSGDRunner(model, fed, train, do_global_agg=do_agg)
+        s1 = init_state(jax.random.PRNGKey(0), model, fed, data)
+        s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
+        _, l_plain = runner.run(s1, data, w, rounds=2)
+        st, l_mesh = runner.run(s2, data, w, rounds=2, mesh=mesh)
+        leaf = jax.tree_util.tree_leaves(st.theta0)[0]
+        out["%%s-%%s" %% (compression, do_agg)] = {
+            "plain": np.asarray(l_plain).tolist(),
+            "mesh": np.asarray(l_mesh).tolist(),
+            "n_shards": len(leaf.sharding.device_set),
+        }
+print("RESULT::" + json.dumps(out))
+"""
+
+
+def _sharded_matrix(n_dev):
+    """Run (once per device count) the full plain-vs-mesh config matrix."""
+    if n_dev in _SHARDED_MATRIX_CACHE:
+        return _SHARDED_MATRIX_CACHE[n_dev]
+    import json
     import os
     import subprocess
     import sys
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import sys
-sys.path.insert(0, os.path.join(%r, "src"))
-sys.path.insert(0, %r)
-import jax, numpy as np
-from tests.test_hsgd import _mini
-from repro.common.config import TrainConfig
-from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
-model, fed, data = _mini()
-runner = HSGDRunner(model, fed, TrainConfig(learning_rate=0.02, compression_k=0.25,
-                                            quantization_bits=128))
-w = make_group_weights(data)
-mesh = jax.make_mesh((2, 1), ("data", "model"))
-s1 = init_state(jax.random.PRNGKey(0), model, fed, data)
-s2 = init_state(jax.random.PRNGKey(0), model, fed, data)
-_, l_plain = runner.run(s1, data, w, rounds=2)
-st, l_mesh = runner.run(s2, data, w, rounds=2, mesh=mesh)
-np.testing.assert_allclose(np.asarray(l_plain), np.asarray(l_mesh), rtol=1e-5)
-leaf = jax.tree_util.tree_leaves(st.theta0)[0]
-assert len(leaf.sharding.device_set) == 2, leaf.sharding  # genuinely sharded
-print("OK")
-""" % (repo, repo)
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
-                         timeout=600)
+    code = _SHARDED_MATRIX_CODE % {"n_dev": n_dev, "repo": repo}
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]
-    assert "OK" in out.stdout
+    payload = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")]
+    assert payload, out.stdout[-2000:]
+    res = json.loads(payload[0][len("RESULT::"):])
+    _SHARDED_MATRIX_CACHE[n_dev] = res
+    return res
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_dev", [2, 4])
+@pytest.mark.parametrize("compression", [False, True])
+@pytest.mark.parametrize("do_global_agg", [False, True])
+def test_group_sharded_run_matrix(n_dev, compression, do_global_agg):
+    """Per-step losses of the mesh-sharded run must match the single-device
+    run to fp32 tolerance, for every exchange configuration."""
+    res = _sharded_matrix(n_dev)
+    entry = res[f"{compression}-{do_global_agg}"]
+    assert entry["n_shards"] == n_dev  # genuinely sharded, not replicated
+    np.testing.assert_allclose(np.asarray(entry["plain"]),
+                               np.asarray(entry["mesh"]), rtol=1e-5, atol=1e-6)
 
 
 def test_sampled_participants_valid_and_distinct():

@@ -50,6 +50,18 @@ def test_input_shapes_assigned():
     assert INPUT_SHAPES["long_500k"].seq_len == 524288
 
 
+def test_federation_config_validates_interval_ratio():
+    """P must be a positive multiple of Q at construction — no silent
+    flooring of Λ anywhere downstream (round_time used to do P // Q)."""
+    import pytest
+
+    with pytest.raises(ValueError):
+        FederationConfig(local_interval=3, global_interval=4)
+    with pytest.raises(ValueError):
+        FederationConfig(local_interval=0, global_interval=4)
+    assert FederationConfig(local_interval=2, global_interval=6).lam == 3
+
+
 def test_comm_model_paper_formula():
     """C(P,Q) matches eq. (19) hand-computed."""
     sizes = MessageSizes(theta0=100.0, theta1=200.0, theta2=50.0, z1=10.0, z2=20.0,

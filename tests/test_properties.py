@@ -1,4 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +14,7 @@ from repro.core import federation as F
 from repro.core.adaptive import (
     convergence_bound,
     max_learning_rate,
+    strategy1_lambda_lower_bound,
     strategy2_optimal_interval,
     strategy3_learning_rate,
 )
@@ -192,6 +195,72 @@ def test_strategy3_eta_decreases_with_Q_at_fixed_ratio(lam):
     e1 = strategy3_learning_rate(lam * 2, 2, rho=2.0, delta=0.5, grad_norm_sq=1.0)
     e2 = strategy3_learning_rate(lam * 8, 8, rho=2.0, delta=0.5, grad_norm_sq=1.0)
     assert e2 <= e1 + 1e-12
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.floats(0.05, 50.0),
+       st.floats(1e-3, 10.0), st.floats(1e-6, 1e3))
+@settings(**SETTINGS)
+def test_strategy3_never_exceeds_eta_cap(P, Q, rho, delta, gnorm2):
+    """η* = min(η₂, 1/(8Pρ)) can NEVER exceed Theorem 1's step-size cap,
+    for any (ρ, δ, ‖∇F‖²) the online probes might produce."""
+    eta = strategy3_learning_rate(P, Q, rho, delta, gnorm2)
+    assert 0.0 < eta <= max_learning_rate(P, rho) * (1 + 1e-12)
+
+
+@given(st.floats(0.05, 5.0), st.floats(1.1, 8.0), st.integers(1, 32),
+       st.integers(1, 32), st.floats(1e-4, 1e-2))
+@settings(**SETTINGS)
+def test_bound_monotone_in_delta(delta, factor, P, Q, eta):
+    """Γ's noise terms are even powers of δ: more gradient noise can never
+    tighten the bound."""
+    args = dict(F0=1.0, FT=0.0, rho=2.0, eta=eta, P=P, Q=Q, T=1000)
+    b_lo = convergence_bound(delta=delta, **args)
+    b_hi = convergence_bound(delta=delta * factor, **args)
+    assert b_hi >= b_lo - 1e-12
+
+
+def _eta_star(F0, FT, rho, delta, P, Q, T):
+    """Numeric minimizer of Γ(η) = A/η + Bη + Cη² (convex on η > 0):
+    bisection on Γ'(η) = −A/η² + B + 2Cη, which is increasing in η."""
+    A = 4.0 * (F0 - FT) / T
+    B = 12.0 * P * rho * delta**2
+    C = 96.0 * Q**2 * rho**2 * delta**2
+    lo, hi = 1e-9, 1e9
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if B + 2.0 * C * mid - A / mid**2 < 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+@given(st.floats(0.1, 5.0), st.floats(0.2, 3.0), st.integers(1, 16),
+       st.floats(1.0, 20.0), st.floats(1.0, 20.0))
+@settings(**SETTINGS)
+def test_bound_decreases_toward_eta_star_from_above(rho, delta, P, c_near, c_far):
+    """Strategy 3's premise: above the minimizer η*, Γ is non-decreasing in η
+    — so walking η down toward η* from above can only improve the bound."""
+    F0, FT, Q, T = 1.0, 0.0, P, 1000
+    eta_star = _eta_star(F0, FT, rho, delta, P, Q, T)
+    near, far = sorted((c_near, c_far))
+    b_near = convergence_bound(F0, FT, rho, delta, eta_star * near, P, Q, T)
+    b_far = convergence_bound(F0, FT, rho, delta, eta_star * far, P, Q, T)
+    assert b_far >= b_near * (1 - 1e-9)
+
+
+@given(st.floats(0.01, 100.0), st.floats(0.1, 5.0), st.floats(0.1, 3.0),
+       st.floats(1e-4, 1e-2), st.integers(1, 32), st.integers(100, 100000))
+@settings(**SETTINGS)
+def test_strategy1_lambda_inf_iff_target_infeasible(target, rho, delta, eta, P, T):
+    """Prop. 1's Λ lower bound is inf EXACTLY when the target Ξ is below what
+    any amount of communication can achieve at this (P, η)."""
+    F0, FT = 1.0, 0.0
+    lam = strategy1_lambda_lower_bound(F0, FT, rho, delta, eta, P, T, target)
+    denom = target - 4.0 * (F0 - FT) / (eta * T) - 12.0 * P * rho * eta * delta**2
+    assert math.isinf(lam) == (denom <= 0)
+    if not math.isinf(lam):
+        assert lam > 0
 
 
 # ---------------------------------------------------------------------------
