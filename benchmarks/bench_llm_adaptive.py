@@ -1,0 +1,158 @@
+"""Fixed-cadence vs §VI-adaptive HSGD on the LLM-scale ``llm_hybrid`` path.
+
+The e-health claim (BENCH_adaptive.json), rerun where communication actually
+bites: a smoke-scale assigned architecture trained through the compiled
+federated rounds of ``launch/steps.py`` on resampled synthetic token streams.
+
+  * fixed    — ``LLMRoundRunner.run_fixed`` at a constant (P, Q, η),
+               uncompressed messages (exchange every step at P = Q = 1);
+  * adaptive — ``AdaptiveLLMRunner`` re-picking P = Q and η every round from
+               the step's own gradient probes, with the byte governor holding
+               the run under ``--budget-frac`` × the fixed run's eq. (19) bill.
+
+Writes BENCH_llm_adaptive.json (schema in benchmarks/README.md). The headline
+acceptance: ``summary.adaptive_reaches_target`` with
+``summary.adaptive_bytes_to_target`` strictly below the fixed run's bill, and
+one compiled executor per distinct (P, Q, k, b) bucket.
+
+  PYTHONPATH=src python benchmarks/bench_llm_adaptive.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import csv_row
+import jax
+
+from repro.common.config import get_config
+from repro.core import comm_model as CM
+from repro.core.controller import AdaptiveConfig
+from repro.core.metrics import smoothed_losses, steps_to_target
+from repro.data.synthetic import llm_batch_fn
+from repro.launch.steps import AdaptiveLLMRunner, LLMRoundRunner, init_llm_params
+from repro.models.split_model import llm_hybrid
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config instead of the smoke reduction")
+    ap.add_argument("--steps", type=int, default=192)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--p", type=int, default=1, help="fixed-cadence P")
+    ap.add_argument("--q", type=int, default=1, help="fixed-cadence Q")
+    ap.add_argument("--lr", type=float, default=0.06,
+                    help="fixed-cadence η AND the adaptive seed; keep within "
+                         "Theorem 1's η ≤ 1/(8Pρ) regime (ρ ≈ 1-2 here) or "
+                         "the comparison is theory-vs-folklore")
+    ap.add_argument("--budget-frac", type=float, default=0.2,
+                    help="adaptive byte budget as a fraction of the fixed bill")
+    ap.add_argument("--max-interval", type=int, default=8)
+    ap.add_argument("--smooth", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..",
+                                                  "BENCH_llm_adaptive.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    model = llm_hybrid(cfg, n_tower=1, remat=False)
+    G = args.pods
+    mk_params = lambda: init_llm_params(jax.random.PRNGKey(args.seed), model,
+                                        n_pods=G)
+    mk_batches = lambda: llm_batch_fn(cfg, args.batch, args.seq, n_pods=G,
+                                      seed=args.seed)
+
+    # shared eq. (19) size model (live ζ shapes), via the adaptive runner;
+    # abstract param shapes only — no throwaway init at --full scale
+    adaptive = AdaptiveLLMRunner(model, n_pods=G, learning_rate=args.lr)
+    params_sds = jax.eval_shape(
+        lambda k: init_llm_params(k, model, n_pods=G), jax.random.PRNGKey(0))
+    sizes_of = adaptive._sizes_of(params_sds, mk_batches()(0, 1))
+
+    # ---- fixed-cadence baseline (uncompressed) -----------------------------
+    steps = max(1, args.steps // args.p) * args.p  # whole rounds, same budget
+    fixed_runner = LLMRoundRunner(model, n_pods=G)
+    _, fixed_losses = fixed_runner.run_fixed(
+        mk_params(), mk_batches(), steps=steps, P=args.p, Q=args.q, lr=args.lr)
+    per_iter = CM.per_round_bytes(sizes_of(0.0, 0), args.p, args.q, G) / args.p
+    fixed_bytes = per_iter * np.arange(1, len(fixed_losses) + 1)
+
+    # ---- adaptive under budget-frac × the fixed bill -----------------------
+    budget = float(fixed_bytes[-1]) * args.budget_frac
+    # eta_min is the anti-stall floor: the controller never drops η below 80%
+    # of the practitioner's seed UNLESS Theorem 1's 1/(8Pρ) cap demands it
+    # (the floor yields to the cap in plan_round's eta_for)
+    adaptive.cfg = AdaptiveConfig(total_steps=steps, byte_budget=budget,
+                                  max_interval=args.max_interval,
+                                  eta_min=0.8 * args.lr,
+                                  eta_max=max(args.lr, 0.05))
+    _, ad_losses, history = adaptive.run(mk_params(), mk_batches())
+    steps_bytes = np.concatenate([
+        np.full(h["P"], h["round_bytes"] / h["P"]) for h in history])
+    ad_bytes = np.cumsum(steps_bytes)
+
+    target = float(smoothed_losses(fixed_losses, args.smooth)[-1])
+    fx_hit = steps_to_target(fixed_losses, target, args.smooth)
+    ad_hit = steps_to_target(ad_losses, target, args.smooth)
+    buckets = {k[:4] for k in adaptive.runner._round_cache}
+
+    summary = {
+        "target_loss": target,
+        "fixed_final_loss": float(smoothed_losses(fixed_losses, args.smooth)[-1]),
+        "adaptive_final_loss": float(smoothed_losses(ad_losses, args.smooth)[-1]),
+        "fixed_total_bytes": float(fixed_bytes[-1]),
+        "adaptive_total_bytes": float(ad_bytes[-1]),
+        "adaptive_byte_budget": budget,
+        "fixed_steps_to_target": fx_hit,
+        "adaptive_steps_to_target": ad_hit,
+        "fixed_bytes_to_target": float(fixed_bytes[fx_hit]) if fx_hit is not None else None,
+        "adaptive_bytes_to_target": float(ad_bytes[ad_hit]) if ad_hit is not None else None,
+        "adaptive_reaches_target": ad_hit is not None,
+        "adaptive_bytes_lower": float(ad_bytes[-1]) < float(fixed_bytes[-1]),
+        "compiled_executors": len(adaptive.runner._round_cache),
+        "distinct_buckets": len(buckets),
+    }
+
+    csv_row("run", "final_loss", "total_MB", "steps_to_target", "MB_to_target")
+    csv_row("fixed", round(summary["fixed_final_loss"], 4),
+            round(summary["fixed_total_bytes"] / 1e6, 3), fx_hit,
+            round((summary["fixed_bytes_to_target"] or 0) / 1e6, 3))
+    csv_row("adaptive", round(summary["adaptive_final_loss"], 4),
+            round(summary["adaptive_total_bytes"] / 1e6, 3), ad_hit,
+            round((summary["adaptive_bytes_to_target"] or 0) / 1e6, 3)
+            if ad_hit is not None else None)
+    for h in history:
+        print(f"#   round {h['round']:3d}: P=Q={h['P']:3d} eta={h['eta']:.4g} "
+              f"rung={h['rung']} bytes={h['bytes_total'] / 1e6:.2f}MB "
+              f"loss={h['loss_last']:.4f}")
+
+    result = {
+        "config": {"arch": args.arch, "smoke": not args.full, "steps": steps,
+                   "batch": args.batch, "seq": args.seq, "pods": G,
+                   "p": args.p, "q": args.q, "lr": args.lr,
+                   "budget_frac": args.budget_frac,
+                   "max_interval": args.max_interval, "smooth": args.smooth,
+                   "seed": args.seed},
+        "summary": summary,
+        "fixed": {"losses": fixed_losses.tolist(), "bytes": fixed_bytes.tolist()},
+        "adaptive": {"losses": ad_losses.tolist(), "bytes": ad_bytes.tolist(),
+                     "history": history},
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {os.path.abspath(args.out)}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,16 @@
 """End-to-end driver: train a ~100M-parameter dense transformer with the
-paper's HSGD federation (hospital tower / device tower / combined backbone,
-stale ζ exchange every Q steps) on synthetic token streams for a few hundred
-steps.
+paper's HSGD federation through the COMPILED round runner (hospital tower /
+device tower / combined backbone; ζ exchange every Q inside one donating
+jitted executor, fresh synthetic stream per exchange).
 
-  PYTHONPATH=src python examples/train_100m_hsgd.py            # 300 steps
-  PYTHONPATH=src python examples/train_100m_hsgd.py --steps 20 # smoke
+By default the §VI adaptive controller drives the run — it re-picks P = Q and
+η every round from the step's own gradient probes and ratchets the
+compression ladder until --byte-budget-mb is honored — and prints the
+per-round trace. --fixed reverts to a constant cadence.
+
+  PYTHONPATH=src python examples/train_100m_hsgd.py                 # 300 steps
+  PYTHONPATH=src python examples/train_100m_hsgd.py --steps 20      # smoke
+  PYTHONPATH=src python examples/train_100m_hsgd.py --fixed --q 4   # baseline
 """
 import argparse
 import os
@@ -14,12 +20,15 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.common.config import ModelConfig
-from repro.launch.steps import make_exchange_step, make_hsgd_train_step
+from repro.common.pytree import tree_size
+from repro.core.controller import AdaptiveConfig
+from repro.core.metrics import smoothed_losses
+from repro.data.synthetic import llm_batch_fn
+from repro.launch.steps import (AdaptiveLLMRunner, LLMRoundRunner,
+                                global_llm_params, init_llm_params)
 from repro.models.split_model import llm_hybrid
 
 
@@ -31,60 +40,68 @@ def config_100m() -> ModelConfig:
     )
 
 
-def synthetic_stream(rng, vocab, batch, seq):
-    """Markov-ish synthetic tokens: next token correlated with previous."""
-    base = rng.randint(0, vocab, (batch, seq + 1))
-    drift = (base[:, :-1] + rng.randint(0, 17, (batch, seq))) % vocab
-    mask = rng.rand(batch, seq) < 0.7
-    toks = np.where(mask, drift, base[:, 1:])
-    return base[:, :-1], toks
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--q", type=int, default=4, help="exchange interval Q")
+    ap.add_argument("--pods", type=int, default=1, help="pod groups G")
+    ap.add_argument("--fixed", action="store_true",
+                    help="constant cadence instead of the adaptive controller")
+    ap.add_argument("--q", type=int, default=4, help="fixed exchange interval Q")
+    ap.add_argument("--max-interval", type=int, default=16,
+                    help="adaptive cap on P = Q")
+    ap.add_argument("--byte-budget-mb", type=float, default=float("inf"))
     ap.add_argument("--lr", type=float, default=3e-2)
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
 
     cfg = config_100m()
     model = llm_hybrid(cfg, n_tower=2, remat=False)
-    params = model.init(jax.random.PRNGKey(0))
-    from repro.common.pytree import tree_size
-
-    n_params = sum(tree_size(params[k]) for k in params)
+    params = init_llm_params(jax.random.PRNGKey(0), model, n_pods=args.pods)
+    n_params = sum(tree_size(params[k]) // args.pods for k in params)
     print(f"hybrid model: {n_params/1e6:.1f}M params "
-          f"(combined {tree_size(params['theta0'])/1e6:.1f}M)")
+          f"(combined {tree_size(params['theta0'])/args.pods/1e6:.1f}M)")
+    batch_fn = llm_batch_fn(cfg, args.batch, args.seq, n_pods=args.pods, seed=0)
 
-    step = jax.jit(make_hsgd_train_step(model, lr=args.lr))
-    exch = jax.jit(make_exchange_step(model))
-    rng = np.random.RandomState(0)
-
-    stale = None
     t0 = time.time()
-    losses = []
-    for t in range(args.steps):
-        if t % args.q == 0:
-            inp, tgt = synthetic_stream(rng, cfg.vocab_size, args.batch, args.seq)
-            s1 = args.seq // 2
-            batch = {
-                "x1": jnp.asarray(inp[:, :s1]),
-                "x2": jnp.asarray(inp[:, s1:]),
-                "y": jnp.asarray(tgt),
-            }
-            stale = exch(params, batch)
-        params, loss = step(params, stale, batch)
-        losses.append(float(loss))
-        if t % 10 == 0 or t == args.steps - 1:
-            dt = time.time() - t0
-            print(f"step {t:4d}  loss {losses[-1]:7.4f}  ({dt/(t+1):.2f}s/step)")
-    assert losses[-1] < losses[0], "training must reduce loss"
-    print(f"done: {losses[0]:.3f} -> {losses[-1]:.3f} in {time.time()-t0:.0f}s")
+    if args.fixed:
+        steps = max(1, args.steps // args.q) * args.q  # whole compiled rounds
+        runner = LLMRoundRunner(model, n_pods=args.pods)
+        params, losses = runner.run_fixed(params, batch_fn, steps=steps,
+                                          P=args.q, Q=args.q, lr=args.lr)
+        # the compiled rounds return after the run: report one overall rate
+        rate = (time.time() - t0) / len(losses)
+        for t in range(0, len(losses), 10):
+            print(f"step {t:4d}  loss {losses[t]:7.4f}")
+        print(f"{rate:.2f}s/step overall (compile included)")
+    else:
+        acfg = AdaptiveConfig(total_steps=args.steps,
+                              byte_budget=args.byte_budget_mb * 1e6,
+                              max_interval=args.max_interval,
+                              # anti-stall floor at half the seed η (yields to
+                              # Theorem 1's 1/(8Pρ) cap inside plan_round)
+                              eta_min=0.5 * args.lr,
+                              eta_max=max(args.lr, 0.05))
+        runner = AdaptiveLLMRunner(model, acfg, n_pods=args.pods,
+                                   learning_rate=args.lr)
+        params, losses, history = runner.run(params, batch_fn)
+        for h in history:
+            print(f"round {h['round']:3d}: P=Q={h['P']:3d} eta={h['eta']:.4g} "
+                  f"rung={h['rung']} bytes={h['bytes_total']/1e6:.1f}MB "
+                  f"loss={h['loss_last']:7.4f} rho={h['rho']:.3g} "
+                  f"delta={h['delta']:.3g}")
+        print(f"compiled executors: {len(runner.runner._round_cache)} "
+              f"(one per distinct (P, Q, k, b) bucket)")
+
+    sm = smoothed_losses(losses, window=8)
+    assert sm[-1] < sm[0], "training must reduce the smoothed loss"
+    print(f"done: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(smoothed {sm[0]:.3f} -> {sm[-1]:.3f}) in {time.time()-t0:.0f}s")
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, params, step=args.steps)
+        # flat {θ0, θ1, θ2} global model (pod mean), as before PR 3
+        save_checkpoint(args.checkpoint, global_llm_params(params),
+                        step=len(losses))
         print(f"checkpoint -> {args.checkpoint}")
 
 

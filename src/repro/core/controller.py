@@ -35,6 +35,14 @@ state-donating executor per (P, Q, compression) bucket, so the round-varying
 schedule costs one compile per bucket (P snaps to powers of two), not one per
 round. PR 1's donation / mesh-sharding / fused-compression paths are reused
 unchanged underneath.
+
+The loop's bookkeeping is representation-agnostic: ``ControllerCore`` holds
+the probe EMA, the step/byte ledgers, and the ladder ratchet, and only ever
+sees (a) a ``sizes_of(k, b)`` callback for the eq. (19) cost model and (b) the
+per-step stats dict a round executor emits. ``AdaptiveHSGDRunner`` binds it to
+the e-health ``HSGDState`` path; the LLM-scale runner
+(``launch/steps.py::AdaptiveLLMRunner``) binds the SAME core to the
+``llm_hybrid`` compiled rounds.
 """
 from __future__ import annotations
 
@@ -186,6 +194,103 @@ def plan_round(
                      gamma=gamma(P, eta), projected_bytes=projected(P, rung))
 
 
+# neutral probe seed: the first plan degenerates to P = Q = 1 and the online
+# stats take over from round 1 (used when no §VI-B pre-training probe runs)
+NEUTRAL_PROBE = {"rho": 1.0, "delta": 1.0, "F0": 1.0, "grad_norm_sq": 1.0}
+
+
+def probe_from_stats(stats, Q: int, fallback_rho: float = 1.0) -> Dict[str, float]:
+    """Raw §VI-B probe measurement from one round's [P] stats arrays.
+
+    ``stats`` is the dict every round executor emits (loss/gnorm2/delta2/rho/
+    rho_ok per step) — shared by the e-health and LLM runners, so the probe
+    extraction lives here, independent of either state representation.
+    """
+    loss = np.asarray(stats["loss"])
+    rho = np.asarray(stats["rho"])
+    ok = np.asarray(stats["rho_ok"]) > 0.5
+    return {
+        "F0": float(np.mean(loss[-Q:])),
+        "delta": float(np.sqrt(max(float(np.mean(np.asarray(stats["delta2"]))), 1e-16))),
+        "grad_norm_sq": float(np.mean(np.asarray(stats["gnorm2"]))),
+        # median valid secant ≈ local Lipschitz constant along the
+        # trajectory (median, not max: a single staleness spike must not
+        # collapse η through the 1/(8Pρ) cap). Q=1 rounds have no
+        # within-interval pair — the caller keeps its standing estimate.
+        "rho": float(np.median(rho[ok])) if ok.any() else fallback_rho,
+    }
+
+
+def update_probe(probe: Dict[str, float], stats, Q: int,
+                 cfg: AdaptiveConfig) -> Dict[str, float]:
+    """EMA + slew-limited probe update from one round's stats."""
+    new = probe_from_stats(stats, Q, fallback_rho=probe["rho"])
+    e, slew = cfg.ema, cfg.probe_slew
+    out = {}
+    for k in probe:
+        v = e * probe[k] + (1.0 - e) * new[k]
+        if slew > 1.0 and probe[k] > 0:  # trust region: bounded per-round drift
+            v = min(max(v, probe[k] / slew), probe[k] * slew)
+        out[k] = v
+    return out
+
+
+class ControllerCore:
+    """State-representation-agnostic §VI loop: plan -> (caller runs the
+    round) -> record.
+
+    The caller owns the model state and the compiled round executors; the core
+    owns everything else — the probe EMA, the ladder ratchet, the step/byte
+    ledgers, and the per-round history. One core instance is one run.
+    """
+
+    def __init__(self, cfg: AdaptiveConfig, fed: FederationConfig, sizes_of,
+                 eta0: float, probe: Optional[Dict[str, float]] = None):
+        self.cfg, self.fed, self.sizes_of = cfg, fed, sizes_of
+        self.probe = dict(probe) if probe is not None else dict(NEUTRAL_PROBE)
+        self.steps_done = 0
+        self.bytes_spent = 0.0
+        self.rung = 0
+        self.eta_prev = eta0
+        self.history: List[Dict[str, Any]] = []
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.cfg.total_steps
+
+    def plan(self) -> Tuple[RoundPlan, Tuple[float, int]]:
+        """Next round's settings + its (k_frac, levels) ladder rung."""
+        plan = plan_round(self.probe, self.steps_done, self.bytes_spent,
+                          self.rung, self.eta_prev, self.cfg, self.fed,
+                          self.sizes_of)
+        self.rung = plan.rung  # the ladder is a ratchet: never loosened
+        return plan, self.cfg.ladder[plan.rung]
+
+    def record(self, plan: RoundPlan, stats) -> Dict[str, Any]:
+        """Charge the executed round's eq. (19) bill, log it, update probes."""
+        k_frac, levels = self.cfg.ladder[plan.rung]
+        round_bytes = CM.per_round_bytes(
+            self.sizes_of(k_frac, levels), plan.P, plan.Q, self.fed.num_groups)
+        self.bytes_spent += round_bytes
+        self.steps_done += plan.P
+        rec = {
+            "round": len(self.history), "P": plan.P, "Q": plan.Q,
+            "eta": plan.eta, "rung": plan.rung,
+            "compression_k": k_frac, "quant_levels": levels,
+            "gamma": plan.gamma, "target_bound": self.cfg.target_bound,
+            "rho": self.probe["rho"], "delta": self.probe["delta"],
+            "grad_norm_sq": self.probe["grad_norm_sq"], "F0": self.probe["F0"],
+            "round_bytes": round_bytes, "bytes_total": self.bytes_spent,
+            "projected_bytes": plan.projected_bytes,
+            "steps_done": self.steps_done,
+            "loss_last": float(np.asarray(stats["loss"])[-1]),
+        }
+        self.history.append(rec)
+        self.eta_prev = plan.eta
+        self.probe = update_probe(self.probe, stats, plan.Q, self.cfg)
+        return rec
+
+
 class AdaptiveHSGDRunner:
     """Closed-loop trainer: plan -> run one compiled round -> re-probe."""
 
@@ -227,31 +332,6 @@ class AdaptiveHSGDRunner:
 
         return sizes_of
 
-    # -- probe handling ------------------------------------------------------
-
-    def _update_probe(self, probe: Dict[str, float], stats, Q: int) -> Dict[str, float]:
-        loss = np.asarray(stats["loss"])
-        rho = np.asarray(stats["rho"])
-        ok = np.asarray(stats["rho_ok"]) > 0.5
-        new = {
-            "F0": float(np.mean(loss[-Q:])),
-            "delta": float(np.sqrt(max(float(np.mean(np.asarray(stats["delta2"]))), 1e-16))),
-            "grad_norm_sq": float(np.mean(np.asarray(stats["gnorm2"]))),
-            # median valid secant ≈ local Lipschitz constant along the
-            # trajectory (median, not max: a single staleness spike must not
-            # collapse η through the 1/(8Pρ) cap). Q=1 rounds have no
-            # within-interval pair — keep the EMA standing.
-            "rho": float(np.median(rho[ok])) if ok.any() else probe["rho"],
-        }
-        e, slew = self.cfg.ema, self.cfg.probe_slew
-        out = {}
-        for k in probe:
-            v = e * probe[k] + (1.0 - e) * new[k]
-            if slew > 1.0 and probe[k] > 0:  # trust region: bounded per-round drift
-                v = min(max(v, probe[k] / slew), probe[k] * slew)
-            out[k] = v
-        return out
-
     # -- main loop -----------------------------------------------------------
 
     def run(self, state: HSGDState, data, group_weights, mesh=None,
@@ -262,50 +342,26 @@ class AdaptiveHSGDRunner:
         per-step losses and a per-round history of every decision the
         controller took (P, Q, η, rung, Γ, probes, modeled bytes).
         """
-        fed, cfg = self.fed, self.cfg
+        cfg = self.cfg
         state, data, group_weights = place_on_mesh(state, data, group_weights, mesh)
-        sizes_of = self._sizes_of(state)
 
         if cfg.init_probe:
             key = probe_key if probe_key is not None else jax.random.PRNGKey(0)
             probe = estimate_rho_delta(self.model, global_model(state, group_weights),
                                        data, key, batch=cfg.probe_batch)
-        else:  # neutral seed: first plan degenerates to P = Q = 1
-            probe = {"rho": 1.0, "delta": 1.0, "F0": 1.0, "grad_norm_sq": 1.0}
+        else:
+            probe = None  # NEUTRAL_PROBE: first plan degenerates to P = Q = 1
 
+        core = ControllerCore(cfg, self.fed, self._sizes_of(state),
+                              eta0=self.train.learning_rate, probe=probe)
         losses: List[np.ndarray] = []
-        history: List[Dict[str, Any]] = []
-        steps_done, bytes_spent, rung = 0, 0.0, 0
-        eta_prev = self.train.learning_rate
-
-        while steps_done < cfg.total_steps:
-            plan = plan_round(probe, steps_done, bytes_spent, rung,
-                              eta_prev, cfg, fed, sizes_of)
-            rung = plan.rung  # the ladder is a ratchet: never loosened
-            k_frac, levels = cfg.ladder[rung]
+        while not core.done:
+            plan, (k_frac, levels) = core.plan()
             fn = self.runner.round_fn(plan.P, plan.Q, k_frac, levels,
                                       collect_stats=True)
             state, stats = fn(state, data, group_weights, plan.eta)
             stats = jax.device_get(stats)
-
-            round_bytes = CM.per_round_bytes(
-                sizes_of(k_frac, levels), plan.P, plan.Q, fed.num_groups)
-            bytes_spent += round_bytes
-            steps_done += plan.P
-            eta_prev = plan.eta
             losses.append(np.asarray(stats["loss"]))
-            history.append({
-                "round": len(history), "P": plan.P, "Q": plan.Q,
-                "eta": plan.eta, "rung": rung,
-                "compression_k": k_frac, "quant_levels": levels,
-                "gamma": plan.gamma, "target_bound": cfg.target_bound,
-                "rho": probe["rho"], "delta": probe["delta"],
-                "grad_norm_sq": probe["grad_norm_sq"], "F0": probe["F0"],
-                "round_bytes": round_bytes, "bytes_total": bytes_spent,
-                "projected_bytes": plan.projected_bytes,
-                "steps_done": steps_done,
-                "loss_last": float(np.asarray(stats["loss"])[-1]),
-            })
-            probe = self._update_probe(probe, stats, plan.Q)
+            core.record(plan, stats)
 
-        return AdaptiveResult(state, np.concatenate(losses), history)
+        return AdaptiveResult(state, np.concatenate(losses), core.history)

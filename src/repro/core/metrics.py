@@ -72,7 +72,11 @@ def _softmax(x):
 
 
 def precision_recall_f1(y_true, y_pred, n_classes: int) -> Dict[str, float]:
-    precs, recs = [], []
+    """Macro precision/recall/F1. Macro-F1 is the MEAN OF PER-CLASS F1 scores
+    (f1_c = 2·tp/(2·tp + fp + fn), over classes present in y_true or y_pred),
+    not the harmonic mean of macro-precision and macro-recall — the two only
+    coincide when every class has identical precision and recall."""
+    precs, recs, f1s = [], [], []
     for c in range(n_classes):
         tp = np.sum((y_pred == c) & (y_true == c))
         fp = np.sum((y_pred == c) & (y_true != c))
@@ -81,9 +85,11 @@ def precision_recall_f1(y_true, y_pred, n_classes: int) -> Dict[str, float]:
             precs.append(tp / (tp + fp))
         if tp + fn > 0:
             recs.append(tp / (tp + fn))
+        if tp + fp + fn > 0:
+            f1s.append(2.0 * tp / (2.0 * tp + fp + fn))
     p = float(np.mean(precs)) if precs else 0.0
     r = float(np.mean(recs)) if recs else 0.0
-    f1 = 2 * p * r / (p + r) if (p + r) > 0 else 0.0
+    f1 = float(np.mean(f1s)) if f1s else 0.0
     return {"precision": p, "recall": r, "f1": f1}
 
 

@@ -1,4 +1,5 @@
-"""Step builders + input specs for every (architecture × input shape).
+"""Step builders + input specs for every (architecture × input shape), and
+the LLM-scale compiled federated runner built from them.
 
 Three lowered programs per training shape (their roofline terms combine as
   cost/step = train_step + (1/Q)·exchange_step + (1/P)·global_agg
@@ -19,21 +20,27 @@ aggregation (eq. 1) is realized by the batch-mean over the data axis that the
 gradient computation already performs — on a pod this reduction is the
 standard within-replica gradient sync, so Q amortizes the *vertical exchange*
 while P amortizes the *cross-pod model sync*.
+
+``LLMRoundRunner`` assembles those three programs into ONE donating, jitted,
+scan-based executor per (P, Q, k, b) bucket — the LLM-scale mirror of
+``core/hsgd.HSGDRunner.round_fn`` — and ``AdaptiveLLMRunner`` drives the §VI
+plan/probe/governor loop (``core/controller.ControllerCore``) over those
+compiled rounds, closing the adaptive loop on the ``llm_hybrid`` path.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.common.config import InputShape, ModelConfig
+from repro.common.config import FederationConfig, InputShape, ModelConfig
 from repro.common.sharding import DEFAULT_RULES, divisible_spec, logical_to_spec
-from repro.core.compression import compress_message
+from repro.common.pytree import tree_dot, tree_norm, tree_size, tree_sub
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.split_model import HybridModel, llm_hybrid
@@ -158,45 +165,106 @@ def make_hybrid(cfg: ModelConfig, n_tower: int = 2, remat: bool = True) -> Hybri
     return llm_hybrid(cfg, n_tower=n_tower, remat=remat)
 
 
-def make_hsgd_train_step(model: HybridModel, lr: float = 1e-3) -> Callable:
-    def step(params, stale, batch):
-        def hosp_loss(t0, t1):
-            z1 = model.h1(t1, batch["x1"])
-            return model.loss(t0, z1, jax.lax.stop_gradient(stale["z2"]), batch["y"])
+def hybrid_grads(model: HybridModel, params, stale, batch):
+    """The eqs. (5)–(7) gradients for one worker: hospital (θ0, θ1) with fresh
+    ζ1/stale ζ2, device θ2 with stale θ0/ζ1. Shared by the plain train step
+    and the probe-collecting stats step."""
 
-        loss, (g0, g1) = jax.value_and_grad(hosp_loss, argnums=(0, 1))(
-            params["theta0"], params["theta1"]
+    def hosp_loss(t0, t1):
+        z1 = model.h1(t1, batch["x1"])
+        return model.loss(t0, z1, jax.lax.stop_gradient(stale["z2"]), batch["y"])
+
+    loss, (g0, g1) = jax.value_and_grad(hosp_loss, argnums=(0, 1))(
+        params["theta0"], params["theta1"]
+    )
+
+    def dev_loss(t2):
+        z2 = model.h2(t2, batch["x2"])
+        return model.loss(
+            jax.lax.stop_gradient(stale["theta0"]),
+            jax.lax.stop_gradient(stale["z1"]),
+            z2,
+            batch["y"],
         )
 
-        def dev_loss(t2):
-            z2 = model.h2(t2, batch["x2"])
-            return model.loss(
-                jax.lax.stop_gradient(stale["theta0"]),
-                jax.lax.stop_gradient(stale["z1"]),
-                z2,
-                batch["y"],
-            )
+    g2 = jax.grad(dev_loss)(params["theta2"])
+    return loss, {"theta0": g0, "theta1": g1, "theta2": g2}
 
-        g2 = jax.grad(dev_loss)(params["theta2"])
-        upd = lambda p, g: p - lr * g.astype(p.dtype)
-        new = {
-            "theta0": jax.tree.map(upd, params["theta0"], g0),
-            "theta1": jax.tree.map(upd, params["theta1"], g1),
-            "theta2": jax.tree.map(upd, params["theta2"], g2),
-        }
-        return new, loss
+
+def _apply_update(params, grads, lr):
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+
+
+def make_hsgd_train_step(model: HybridModel, lr: float = 1e-3) -> Callable:
+    """step(params, stale, batch, lr=lr) — ``lr`` may be a traced scalar, so
+    the adaptive runner re-picks η without recompiling."""
+
+    def step(params, stale, batch, lr=lr):
+        loss, grads = hybrid_grads(model, params, stale, batch)
+        return _apply_update(params, grads, lr), loss
+
+    return step
+
+
+def make_hsgd_step_stats(model: HybridModel, n_shards: int = 2) -> Callable:
+    """Probe-collecting twin of ``make_hsgd_train_step`` (the LLM-path
+    analogue of ``core/hsgd.local_sgd_step_stats``).
+
+    The mini-batch is split into ``n_shards`` equal worker shards along the
+    batch axis; each shard's eqs. (5)–(7) gradients are computed and averaged,
+    which IS the full-batch gradient (the losses are example means), so the
+    parameter update is unchanged while the per-shard spread yields the §VI-B
+    δ² estimate for free. Returns (new_params, loss, {gbar, gnorm2, delta2}).
+    """
+
+    def step(params, stale, batch, lr):
+        B = batch["y"].shape[0]
+        if n_shards > 1 and B % n_shards:
+            # a silent 1-shard fallback would make δ² identically zero and
+            # the controller would stop adapting to gradient noise unnoticed
+            raise ValueError(
+                f"probe-collecting step needs batch size divisible by "
+                f"n_shards={n_shards}, got {B}")
+        ns = n_shards
+        split = lambda x: x.reshape((ns, x.shape[0] // ns) + x.shape[1:])
+
+        def shard_grads(z1_s, z2_s, batch_s):
+            stale_s = {"theta0": stale["theta0"], "z1": z1_s, "z2": z2_s}
+            return hybrid_grads(model, params, stale_s, batch_s)
+
+        losses, g = jax.vmap(shard_grads)(
+            split(stale["z1"]), split(stale["z2"]), jax.tree.map(split, batch))
+        gbar = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), axis=0), g)
+        dev = jax.tree.map(
+            lambda x, m: jnp.sum((x.astype(jnp.float32) - m[None]) ** 2,
+                                 axis=tuple(range(1, x.ndim))), g, gbar)
+        delta2 = jnp.mean(sum(jax.tree_util.tree_leaves(dev)))
+        new = _apply_update(params, gbar, lr)
+        aux = {"gbar": gbar, "gnorm2": tree_dot(gbar, gbar), "delta2": delta2}
+        return new, jnp.mean(losses), aux
 
     return step
 
 
 def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: int = 0) -> Callable:
+    """ζ1/ζ2 recompute + θ0 snapshot — the C-HSGD wire message.
+
+    The WHOLE {θ0, ζ1, ζ2} message is compressed in one ``compress_pytree``
+    call, matching ``core/hsgd.exchange`` and the ``comm_model.message_sizes``
+    byte accounting (which bills θ0 as compressed). A previous version
+    compressed only ζ1/ζ2 and transmitted θ0 dense, silently diverging from
+    the eq. (19) bill on the LLM path.
+    """
+
     def exchange(params, batch):
         z1 = model.h1(params["theta1"], batch["x1"])
         z2 = model.h2(params["theta2"], batch["x2"])
+        msg = {"theta0": params["theta0"], "z1": z1, "z2": z2}
         if compression_k or quant:
-            z1 = compress_message(z1, compression_k or 1.0, quant)
-            z2 = compress_message(z2, compression_k or 1.0, quant)
-        return {"theta0": params["theta0"], "z1": z1, "z2": z2}
+            from repro.kernels.compress import compress_pytree
+
+            msg = compress_pytree(msg, compression_k or 1.0, quant)
+        return msg
 
     return exchange
 
@@ -355,3 +423,247 @@ def build_programs(cfg: ModelConfig, shape: InputShape, *, n_tower: int = 2,
         )
     entries["serve_step"] = (fn, (p_sds, b_sds), (p_axes, b_axes))
     return Programs(entries)
+
+
+# ---------------------------------------------------------------------------
+# LLM-scale compiled federated rounds
+# ---------------------------------------------------------------------------
+
+
+def init_llm_params(key, model: HybridModel, n_pods: int = 1, dtype=jnp.float32):
+    """Alg. 1 line 1 at pod scale: every pod group starts from one global
+    model. Leaves carry a leading [G] pod axis (G = 1 collapses to the
+    single-group path at negligible vmap cost)."""
+    params = model.init(key, dtype)
+    return jax.tree.map(lambda x: jnp.stack([x] * n_pods), params)
+
+
+def global_llm_params(params):
+    """Collapse the pod axis to the observable global model (eq. (2), equal
+    pod weights) — the flat {θ0, θ1, θ2} layout that checkpoints store and
+    that ``model.h1/h2/loss`` and the serve-step specs consume."""
+    return jax.tree.map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+        params)
+
+
+@dataclass(frozen=True)
+class LLMRoundRunner:
+    """Compiled HSGD rounds over the ``llm_hybrid`` program set.
+
+    One global round = [global_agg across pod groups] + Λ × [exchange +
+    Q × hsgd_train_step], staged exactly like ``HSGDRunner._round_impl``:
+    ``round_fn(P, Q, k, b)`` compiles ONE donating jitted scan executor per
+    bucket (cached on the runner), η rides through as a traced scalar so the
+    adaptive controller re-picks it for free, and the exchange compresses the
+    whole {θ0, ζ1, ζ2} message in one fused ``compress_pytree`` call.
+
+    Params carry a leading [G] pod axis (``init_llm_params``); per-round
+    batches carry [Λ, G, ...] — one fresh token-stream batch per exchange
+    interval per pod, so every exchange resamples instead of training on a
+    frozen batch.
+    """
+
+    model: HybridModel
+    n_pods: int = 1
+    n_shards: int = 2  # δ²-probe worker shards per pod (stats rounds)
+    # (P, Q, k, b, collect) bucket -> compiled round executor
+    _round_cache: Dict = field(default_factory=dict, compare=False, repr=False)
+
+    def _round_impl(self, params, batches, eta, Q: int, lam: int,
+                    compression_k: float, quant_levels: int, collect: bool):
+        model = self.model
+        if self.n_pods > 1:
+            params = make_global_agg()(params)  # eq. (2) across pod groups
+        exch = jax.vmap(make_exchange_step(model, compression_k, quant_levels))
+
+        if not collect:
+            step = jax.vmap(make_hsgd_train_step(model), in_axes=(0, 0, 0, None))
+
+            def interval(params, batch_i):
+                stale = exch(params, batch_i)
+
+                def sgd_step(params, _):
+                    params, losses = step(params, stale, batch_i, eta)
+                    return params, jnp.mean(losses)
+
+                return jax.lax.scan(sgd_step, params, None, length=Q)
+
+            params, losses = jax.lax.scan(interval, params, batches, length=lam)
+            return params, losses.reshape(-1)
+
+        stepf = jax.vmap(make_hsgd_step_stats(model, self.n_shards),
+                         in_axes=(0, 0, 0, None))
+        # template for the previous step's global-gradient proxy (fp32, one
+        # model copy — the per-pod gbar mean)
+        zeros_g = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], jnp.float32), params)
+
+        def interval(params, batch_i):
+            stale = exch(params, batch_i)
+
+            def sgd_step(carry, _):
+                params, prev_g, prev_ok = carry
+                params, loss_pods, aux = stepf(params, stale, batch_i, eta)
+                gbar = jax.tree.map(lambda x: jnp.mean(x, axis=0), aux["gbar"])
+                # law of total variance: worker spread = within-pod shard
+                # spread + pod-mean spread around the global mean
+                pod_dev = jax.tree.map(
+                    lambda x, m: jnp.sum((x - m[None]) ** 2,
+                                         axis=tuple(range(1, x.ndim))),
+                    aux["gbar"], gbar)
+                delta2 = jnp.mean(aux["delta2"]) + jnp.mean(
+                    sum(jax.tree_util.tree_leaves(pod_dev)))
+                diff = tree_norm(tree_sub(gbar, prev_g))
+                den = eta * tree_norm(prev_g)
+                rho = jnp.where(prev_ok > 0.5, diff / jnp.maximum(den, 1e-12), 0.0)
+                stats = {"loss": jnp.mean(loss_pods),
+                         "gnorm2": tree_dot(gbar, gbar),
+                         "delta2": delta2, "rho": rho, "rho_ok": prev_ok}
+                return (params, gbar, jnp.ones((), jnp.float32)), stats
+
+            (params, _, _), stats = jax.lax.scan(
+                sgd_step, (params, zeros_g, jnp.zeros((), jnp.float32)),
+                None, length=Q)
+            return params, stats
+
+        params, stats = jax.lax.scan(interval, params, batches, length=lam)
+        stats = jax.tree.map(lambda x: x.reshape(-1), stats)  # [Λ, Q] -> [P]
+        return params, stats
+
+    def round_fn(self, P: int, Q: int, compression_k: float = 0.0,
+                 quant_levels: int = 0, collect_stats: bool = True):
+        """Compiled single-round executor for a (P, Q, k, b) bucket.
+
+        fn(params, batches, eta) -> (params, stats|losses). ``batches`` leaves
+        lead with [Λ = P/Q, G, ...]; ``params`` is donated; ``eta`` is traced.
+        Cached per bucket — a run whose cadence varies round-to-round pays one
+        compile per distinct bucket, not one per round.
+        """
+        if P < 1 or Q < 1 or P % Q:
+            raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
+        key = (P, Q, compression_k, quant_levels, collect_stats)
+        fn = self._round_cache.get(key)
+        if fn is None:
+            lam = P // Q
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def fn(params, batches, eta):
+                return self._round_impl(params, batches, eta, Q, lam,
+                                        compression_k, quant_levels,
+                                        collect_stats)
+
+            self._round_cache[key] = fn
+        return fn
+
+    def run_fixed(self, params, batch_fn, steps: int, P: int, Q: int, lr: float,
+                  compression_k: float = 0.0, quant_levels: int = 0):
+        """Fixed-cadence driver (the pre-§VI baseline): exchange every Q,
+        global agg every P, for ``steps / P`` whole compiled rounds.
+
+        ``steps`` must be a positive multiple of P — rounds are compiled
+        whole, and silently training more or fewer steps than asked would
+        desynchronize trajectories, byte bills, and checkpoints (same
+        no-silent-flooring rule as ``FederationConfig``). Callers with a free
+        step budget round it themselves (see ``launch/train.py::run_llm``)."""
+        if steps < P or steps % P:
+            raise ValueError(
+                f"steps={steps} must be a positive multiple of P={P} "
+                f"(whole compiled rounds; round your budget explicitly)")
+        fn = self.round_fn(P, Q, compression_k, quant_levels, collect_stats=False)
+        losses = []
+        for r in range(steps // P):
+            params, l = fn(params, batch_fn(r, P // Q), lr)
+            losses.append(np.asarray(jax.device_get(l)))
+        return params, np.concatenate(losses)
+
+
+class AdaptiveLLMRunner:
+    """Closed-loop §VI controller over ``LLMRoundRunner`` — the same
+    plan/probe/governor loop as ``core/controller.AdaptiveHSGDRunner``,
+    rebased onto the LLM-scale state representation.
+
+    * probes come from the LLM step's own gradients
+      (``make_hsgd_step_stats``: δ² from per-shard/per-pod gradient spread,
+      ‖∇F‖² from the pod-mean gradient, ρ from within-interval secants);
+    * ``message_sizes`` is built from the ``llm_hybrid`` specs and the live
+      ζ1/ζ2 token-stream shapes (``eval_shape`` on the actual batch);
+    * the byte governor walks the same ``COMPRESSION_LADDER`` ratchet.
+    """
+
+    def __init__(self, model: HybridModel, cfg=None, n_pods: int = 1,
+                 learning_rate: float = 1e-3, n_shards: int = 2):
+        from repro.core.controller import AdaptiveConfig
+
+        self.model = model
+        self.cfg = cfg or AdaptiveConfig()
+        self.n_pods = n_pods
+        self.lr0 = learning_rate
+        self.runner = LLMRoundRunner(model, n_pods=n_pods, n_shards=n_shards)
+        # eq. (19) view of the pod topology: each pod group is one
+        # hospital-device pair exchanging over the modeled links
+        self.fed = FederationConfig(num_groups=n_pods, devices_per_group=1,
+                                    alpha=1.0)
+
+    def _sizes_of(self, params, batch):
+        """``sizes_of(k, b)`` governor callback; ζ1/ζ2 element counts read off
+        the live token-stream shapes via ``eval_shape`` (zero FLOPs)."""
+        from repro.core import comm_model as CM
+
+        pod_sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params)
+        b_pod = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), batch)
+        z1 = jax.eval_shape(self.model.h1, pod_sds["theta1"], b_pod["x1"])
+        z2 = jax.eval_shape(self.model.h2, pod_sds["theta2"], b_pod["x2"])
+        z1_el, z2_el = tree_size(z1), tree_size(z2)
+
+        def sizes_of(k_frac: float, levels: int):
+            return CM.message_sizes(pod_sds, z1_el, z2_el,
+                                    self.fed.sampled_devices, k_frac, levels)
+
+        return sizes_of
+
+    def _seed_probe(self, params, batches):
+        """§VI-B pre-training probe, LLM-path flavour: two stats steps on one
+        sampled stream (same batch ⇒ a clean ρ secant) yield the initial
+        {ρ, δ, F0, ‖∇F‖²}. Compiled OUTSIDE the round cache and WITHOUT
+        donation, so no training state is consumed and the one-executor-per-
+        executed-bucket contract is untouched. ``cfg.probe_batch`` does not
+        apply here — the probe batch is whatever ``batch_fn`` samples."""
+        from repro.core.controller import probe_from_stats
+
+        fn = jax.jit(lambda p, b, eta: self.runner._round_impl(
+            p, b, eta, 2, 1, 0.0, 0, True))
+        _, stats = fn(params, batches, self.lr0)
+        return probe_from_stats(jax.device_get(stats), Q=2)
+
+    def run(self, params, batch_fn, probe=None):
+        """Drive ``cfg.total_steps`` iterations adaptively.
+
+        ``params`` is the pod-stacked pytree from ``init_llm_params`` (donated
+        round-by-round — rebind the return value). ``batch_fn(round_idx, lam)``
+        must return a fresh batch pytree with leading [Λ, G, ...] axes; it is
+        called once per round plus once up front for shape inference and (with
+        ``cfg.init_probe``) the seed probe, so it should be cheap and
+        stateless-ish (a seeded sampler). Returns (params, per-step losses,
+        per-round history).
+        """
+        from repro.core.controller import ControllerCore
+
+        peek = batch_fn(0, 1)
+        sizes_of = self._sizes_of(params, peek)
+        if probe is None and self.cfg.init_probe:
+            probe = self._seed_probe(params, peek)
+        core = ControllerCore(self.cfg, self.fed, sizes_of, eta0=self.lr0,
+                              probe=probe)
+        losses = []
+        while not core.done:
+            plan, (k_frac, levels) = core.plan()
+            batches = batch_fn(len(core.history), plan.P // plan.Q)
+            fn = self.runner.round_fn(plan.P, plan.Q, k_frac, levels,
+                                      collect_stats=True)
+            params, stats = fn(params, batches, plan.eta)
+            stats = jax.device_get(stats)
+            losses.append(np.asarray(stats["loss"]))
+            core.record(plan, stats)
+        return params, np.concatenate(losses), core.history

@@ -5,12 +5,18 @@ Two modes:
     with --dataset organamnist|mimic3|esr, runs Algorithm 1 on the 3-tier
     partitioned synthetic data and reports the paper's metrics.
   * LLM-scale federation: --arch <assigned arch> (reduced via --smoke) runs
-    the HSGD hybrid step (hospital/device towers + combined backbone) on
-    synthetic token streams.
+    the compiled HSGD rounds (hospital/device towers + combined backbone,
+    exchange every Q, pod-group agg every P) on resampled synthetic token
+    streams. ``--adaptive`` closes the §VI loop on this path too: the
+    controller re-picks P = Q and η every round from the LLM step's own
+    gradient probes, and the byte governor ratchets the compression ladder
+    until --byte-budget-mb is honored. --pods simulates G pod groups.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --model paper-cnn --rounds 50
   PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke --steps 10
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke \
+      --adaptive --steps 16 --byte-budget-mb 8 --max-interval 8
 """
 from __future__ import annotations
 
@@ -20,7 +26,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.common.config import FederationConfig, TrainConfig, get_config
@@ -121,41 +126,71 @@ def run_ehealth(args) -> dict:
 
 
 def run_llm(args) -> dict:
+    """LLM-scale federation on synthetic token streams (compiled rounds).
+
+    The previous hand loop had two bugs this runner retires: the exchange ran
+    TWICE at step 0 (once before the loop and again at t % q == 0 with t = 0),
+    and the whole run trained on one frozen batch — now every exchange
+    interval resamples a fresh stream, inside one donating jitted executor
+    per (P, Q, k, b) bucket.
+    """
+    from repro.core.controller import AdaptiveConfig, ladder_from
+    from repro.data.synthetic import llm_batch_fn
+    from repro.launch.steps import (
+        AdaptiveLLMRunner,
+        LLMRoundRunner,
+        global_llm_params,
+        init_llm_params,
+    )
+
     cfg = get_config(args.arch, smoke=args.smoke)
     model = llm_hybrid(cfg, n_tower=1, remat=False)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
+    params = init_llm_params(jax.random.PRNGKey(args.seed), model, n_pods=args.pods)
+    batch_fn = llm_batch_fn(cfg, args.batch, args.seq, n_pods=args.pods,
+                            seed=args.seed)
 
-    B, S = args.batch, args.seq
-    rng = np.random.RandomState(args.seed)
-    if cfg.family == "vlm":
-        x1 = jnp.asarray(rng.randn(B, 8, cfg.d_model), jnp.float32)
-    elif cfg.family == "audio":
-        x1 = jnp.asarray(rng.randn(B, cfg.encoder_seq, cfg.d_model), jnp.float32)
-    else:
-        x1 = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S // 2)), jnp.int32)
-    x2 = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S - (0 if cfg.family in ("vlm", "audio") else S // 2))), jnp.int32)
-    ylen = x2.shape[1] if cfg.family in ("vlm", "audio") else S
-    yy = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, ylen)), jnp.int32)
-
-    from repro.launch.steps import make_exchange_step, make_hsgd_train_step
-
-    step = jax.jit(make_hsgd_train_step(model, lr=args.lr))
-    exch = jax.jit(make_exchange_step(model))
-    batch = {"x1": x1, "x2": x2, "y": yy}
-    losses = []
-    stale = exch(params, batch)
     t0 = time.time()
-    for t in range(args.steps):
-        if t % args.q == 0:
-            stale = exch(params, batch)
-        params, loss = step(params, stale, batch)
-        losses.append(float(loss))
-        if t % max(1, args.steps // 10) == 0:
-            print(f"step {t:4d} loss {float(loss):.4f}")
-    out = {"arch": args.arch, "loss_first": losses[0], "loss_last": losses[-1],
-           "steps": args.steps, "wall_s": round(time.time() - t0, 2)}
+    history = None
+    if args.adaptive:
+        acfg = AdaptiveConfig(
+            total_steps=args.steps,
+            target_bound=args.target_bound,
+            byte_budget=args.byte_budget_mb * 1e6,
+            max_interval=args.max_interval,
+            eta_max=max(args.lr * 10, 0.05),
+            ladder=ladder_from(args.compression_k, args.quantization),
+        )
+        runner = AdaptiveLLMRunner(model, acfg, n_pods=args.pods,
+                                   learning_rate=args.lr)
+        params, losses, history = runner.run(params, batch_fn)
+        for h in history:
+            print(f"[adaptive] round {h['round']:3d}: P=Q={h['P']:3d} "
+                  f"eta={h['eta']:.4g} rung={h['rung']} Γ={h['gamma']:.3g} "
+                  f"bytes={h['bytes_total'] / 1e6:.2f}MB loss={h['loss_last']:.4f}")
+    else:
+        steps = max(1, args.steps // args.p) * args.p  # whole compiled rounds
+        if steps != args.steps:
+            print(f"# rounding --steps {args.steps} -> {steps} (whole P={args.p} rounds)")
+        runner = LLMRoundRunner(model, n_pods=args.pods)
+        params, losses = runner.run_fixed(
+            params, batch_fn, steps=steps, P=args.p, Q=args.q, lr=args.lr,
+            compression_k=args.compression_k, quant_levels=args.quantization)
+        for t in range(0, len(losses), max(1, len(losses) // 10)):
+            print(f"step {t:4d} loss {float(losses[t]):.4f}")
+
+    out = {"arch": args.arch, "pods": args.pods,
+           "loss_first": float(losses[0]), "loss_last": float(losses[-1]),
+           "steps": int(len(losses)), "wall_s": round(time.time() - t0, 2)}
+    if history is not None:
+        out["adaptive_rounds"] = len(history)
+        out["adaptive_bytes_total"] = history[-1]["bytes_total"]
+        out["adaptive_final_PQ"] = history[-1]["P"]
     print(json.dumps(out))
+    if args.checkpoint:
+        # flat {θ0, θ1, θ2} global model (pod mean) — the pre-PR-3 format
+        save_checkpoint(args.checkpoint, global_llm_params(params),
+                        step=len(losses))
+        print(f"checkpoint -> {args.checkpoint}")
     return out
 
 
@@ -181,9 +216,12 @@ def main(argv=None):
     ap.add_argument("--lr-halve-every", type=int, default=0)
     ap.add_argument("--compression-k", type=float, default=0.0)
     ap.add_argument("--quantization", type=int, default=0)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod groups G on the LLM path (global agg every P)")
     ap.add_argument("--adaptive", action="store_true",
                     help="closed-loop §VI controller: re-picks P/Q/eta and "
-                         "tightens compression online (hsgd/c-hsgd only)")
+                         "tightens compression online (e-health hsgd/c-hsgd "
+                         "and the --arch LLM path)")
     ap.add_argument("--byte-budget-mb", type=float, default=float("inf"),
                     help="modeled comm budget for the whole run, MB (all groups)")
     ap.add_argument("--target-bound", type=float, default=float("inf"),

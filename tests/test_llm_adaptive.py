@@ -1,0 +1,311 @@
+"""LLM-scale federated runner: exchange/byte-model parity, compiled-round
+equivalence, compile-cache bounds, and the adaptive loop's bookkeeping."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import ModelConfig
+from repro.core import comm_model as CM
+from repro.core.compression import COMPRESSION_LADDER, compressed_bytes
+from repro.core.controller import AdaptiveConfig, ControllerCore, NEUTRAL_PROBE
+from repro.data.synthetic import llm_batch_fn
+from repro.launch.steps import (
+    AdaptiveLLMRunner,
+    LLMRoundRunner,
+    global_llm_params,
+    init_llm_params,
+    make_exchange_step,
+    make_hsgd_step_stats,
+    make_hsgd_train_step,
+)
+from repro.models.split_model import llm_hybrid
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(name="tiny-test", family="dense", num_layers=1, d_model=32,
+                num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=64,
+                mlp="swiglu", dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    return llm_hybrid(tiny_cfg(), n_tower=1, remat=False)
+
+
+def _flat_batch(cfg, B=4, S=8, seed=0):
+    rng = np.random.RandomState(seed)
+    s1 = S // 2
+    inp = rng.randint(0, cfg.vocab_size, (B, S))
+    return {"x1": jnp.asarray(inp[:, :s1]), "x2": jnp.asarray(inp[:, s1:]),
+            "y": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)))}
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: the exchange message and the byte model must agree on
+# WHAT is compressed — {θ0, ζ1, ζ2}, the whole wire message
+# ---------------------------------------------------------------------------
+
+
+def test_exchange_compresses_whole_message_matching_byte_model(tiny_model):
+    """make_exchange_step used to compress only ζ1/ζ2 while message_sizes
+    billed θ0 as compressed. Now every leaf of the {θ0, ζ1, ζ2} message goes
+    through the canonical top-k math and the realized wire size matches the
+    eq. (19) bill."""
+    from repro.core.compression import compress_rows_ref
+
+    cfg = tiny_cfg()
+    params = tiny_model.init(jax.random.PRNGKey(0))
+    batch = _flat_batch(cfg)
+    k_frac = 0.25
+    msg = make_exchange_step(tiny_model, k_frac, 0)(params, batch)
+    raw = make_exchange_step(tiny_model)(params, batch)
+
+    assert set(msg) == {"theta0", "z1", "z2"}  # exactly the billed components
+    # every leaf — θ0 parameters included — equals the canonical per-leaf
+    # compression (the old bug passed θ0 through untouched)
+    for name in ("theta0", "z1", "z2"):
+        for got, orig in zip(jax.tree_util.tree_leaves(msg[name]),
+                             jax.tree_util.tree_leaves(raw[name])):
+            n = orig.shape[-1]
+            k = max(1, round(k_frac * n))
+            want = compress_rows_ref(
+                np.asarray(orig, np.float32).reshape(-1, n), k)
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32).reshape(-1, n), want,
+                rtol=1e-6, atol=0, err_msg=name)
+    theta0_delta = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(jax.tree_util.tree_leaves(msg["theta0"]),
+                        jax.tree_util.tree_leaves(params["theta0"])))
+    assert theta0_delta > 0, "θ0 was transmitted dense (the old parity bug)"
+
+    # realized wire bytes (kept values + 32-bit indices) vs the bill, up to
+    # per-row rounding and tie rows (all-equal |x| rows stay dense by design)
+    sds = {t: jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                           params[t]) for t in params}
+    z1_el = int(np.prod(msg["z1"].shape))
+    z2_el = int(np.prod(msg["z2"].shape))
+    sizes = CM.message_sizes(sds, z1_el, z2_el, 1, k_frac, 0)
+    for name, billed, rel in (("theta0", sizes.theta0, 0.2),
+                              ("z1", sizes.z1, 0.05), ("z2", sizes.z2, 0.05)):
+        actual = sum(
+            float((np.asarray(l).reshape(-1, l.shape[-1]) != 0).sum()) * 8.0
+            for l in jax.tree_util.tree_leaves(msg[name]))  # 4B value + 4B idx
+        assert actual == pytest.approx(billed, rel=rel), name
+
+
+def test_exchange_uncompressed_passthrough(tiny_model):
+    cfg = tiny_cfg()
+    params = tiny_model.init(jax.random.PRNGKey(0))
+    batch = _flat_batch(cfg)
+    msg = make_exchange_step(tiny_model)(params, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(msg["theta0"]),
+                    jax.tree_util.tree_leaves(params["theta0"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Compiled rounds: equivalence with the hand loop + stats-path consistency
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_round_matches_hand_loop(tiny_model):
+    """run_fixed (donating scan executor) computes the same trajectory as the
+    un-staged exchange/step loop it replaced."""
+    cfg = tiny_cfg()
+    lr, P, Q, steps = 0.05, 4, 2, 8
+    bf = llm_batch_fn(cfg, 4, 8, n_pods=1, seed=3)
+    runner = LLMRoundRunner(tiny_model)
+    params = init_llm_params(jax.random.PRNGKey(1), tiny_model, n_pods=1)
+    params, losses = runner.run_fixed(params, bf, steps=steps, P=P, Q=Q, lr=lr)
+
+    # hand loop on flat params, identical batch sequence
+    bf2 = llm_batch_fn(cfg, 4, 8, n_pods=1, seed=3)
+    flat = tiny_model.init(jax.random.PRNGKey(1))
+    step = make_hsgd_train_step(tiny_model, lr=lr)
+    exch = make_exchange_step(tiny_model)
+    ref = []
+    for r in range(steps // P):
+        batches = bf2(r, P // Q)
+        for i in range(P // Q):
+            batch = jax.tree.map(lambda x: x[i, 0], batches)
+            stale = exch(flat, batch)
+            for _ in range(Q):
+                flat, loss = step(flat, stale, batch)
+                ref.append(float(loss))
+    np.testing.assert_allclose(np.asarray(losses), np.asarray(ref),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_stats_step_update_equals_plain_step(tiny_model):
+    """The shard-split probe step's update (mean of shard gradients) IS the
+    full-batch gradient step — probes are free, not a different algorithm."""
+    cfg = tiny_cfg()
+    params = tiny_model.init(jax.random.PRNGKey(0))
+    batch = _flat_batch(cfg, B=4)
+    stale = make_exchange_step(tiny_model)(params, batch)
+    new_plain, loss_plain = make_hsgd_train_step(tiny_model)(params, stale, batch, 0.05)
+    new_stats, loss_stats, aux = make_hsgd_step_stats(tiny_model, 2)(
+        params, stale, batch, 0.05)
+    assert float(loss_stats) == pytest.approx(float(loss_plain), rel=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(new_plain),
+                    jax.tree_util.tree_leaves(new_stats)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+    assert float(aux["delta2"]) >= 0 and float(aux["gnorm2"]) > 0
+
+
+def test_round_stats_shapes_and_rho_validity(tiny_model):
+    runner = LLMRoundRunner(tiny_model, n_pods=2)
+    params = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=2)
+    batches = llm_batch_fn(tiny_cfg(), 4, 8, n_pods=2, seed=0)(0, 2)
+    fn = runner.round_fn(4, 2, collect_stats=True)
+    params, stats = fn(params, batches, 0.05)
+    assert {"loss", "gnorm2", "delta2", "rho", "rho_ok"} <= set(stats)
+    for v in stats.values():
+        assert np.asarray(v).shape == (4,)
+    # Q=2 intervals: the first step of each interval has no secant pair
+    np.testing.assert_array_equal(np.asarray(stats["rho_ok"]), [0, 1, 0, 1])
+    assert (np.asarray(stats["delta2"]) >= 0).all()
+    assert np.isfinite(np.asarray(stats["loss"])).all()
+
+
+def test_run_fixed_rejects_partial_rounds_and_odd_probe_batch(tiny_model):
+    """No silent flooring: a step budget that doesn't decompose into whole
+    compiled rounds is the caller's problem, loudly. Likewise the probe step
+    refuses a batch it can't shard (a silent 1-shard fallback would zero δ²)."""
+    cfg = tiny_cfg()
+    runner = LLMRoundRunner(tiny_model)
+    params = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=1)
+    bf = llm_batch_fn(cfg, 4, 8, n_pods=1, seed=0)
+    with pytest.raises(ValueError, match="multiple of P"):
+        runner.run_fixed(params, bf, steps=10, P=4, Q=2, lr=0.01)
+    batch = _flat_batch(cfg, B=3)
+    stale = make_exchange_step(tiny_model)(tiny_model.init(jax.random.PRNGKey(0)), batch)
+    with pytest.raises(ValueError, match="divisible by n_shards"):
+        make_hsgd_step_stats(tiny_model, 2)(
+            tiny_model.init(jax.random.PRNGKey(0)), stale, batch, 0.01)
+
+
+def test_global_llm_params_restores_flat_checkpoint_format(tiny_model):
+    """Checkpoints store the flat {θ0, θ1, θ2} global model — collapsing the
+    pod axis must reproduce exactly what model.init emits (pods start equal)."""
+    flat = tiny_model.init(jax.random.PRNGKey(0))
+    stacked = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=2)
+    collapsed = global_llm_params(stacked)
+    for a, b in zip(jax.tree_util.tree_leaves(collapsed),
+                    jax.tree_util.tree_leaves(flat)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_round_fn_cache_and_validation(tiny_model):
+    runner = LLMRoundRunner(tiny_model)
+    f1 = runner.round_fn(4, 2, 0.25, 128)
+    assert runner.round_fn(4, 2, 0.25, 128) is f1  # bucket cached
+    assert runner.round_fn(4, 4, 0.25, 128) is not f1
+    assert runner.round_fn(4, 2, 0.0, 0) is not f1
+    with pytest.raises(ValueError):
+        runner.round_fn(4, 3)
+    with pytest.raises(ValueError):
+        runner.round_fn(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive loop: bookkeeping + the acceptance bound on compiled executors
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_llm_accounting_and_compile_bound(tiny_model):
+    cfg = tiny_cfg()
+    acfg = AdaptiveConfig(total_steps=12, byte_budget=1e5, max_interval=4,
+                          eta_min=0.01, eta_max=0.05)
+    ad = AdaptiveLLMRunner(tiny_model, acfg, n_pods=2, learning_rate=0.05)
+    params = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=2)
+    params, losses, history = ad.run(
+        params, llm_batch_fn(cfg, 4, 8, n_pods=2, seed=0))
+
+    assert len(losses) == acfg.total_steps
+    assert sum(h["P"] for h in history) == acfg.total_steps
+    assert all(h["Q"] == h["P"] for h in history)  # strategy 1 throughout
+    rungs = [h["rung"] for h in history]
+    assert all(b >= a for a, b in zip(rungs, rungs[1:]))  # ladder ratchet
+    bytes_curve = [h["bytes_total"] for h in history]
+    assert all(b > a for a, b in zip(bytes_curve, bytes_curve[1:]))
+    assert np.isfinite(losses).all()
+    # ACCEPTANCE: at most one compiled executor per distinct (P, Q, k, b)
+    buckets = {(h["P"], h["Q"], h["compression_k"], h["quant_levels"])
+               for h in history}
+    assert len(ad.runner._round_cache) <= len(buckets)
+
+
+def test_adaptive_llm_byte_model_uses_live_shapes(tiny_model):
+    """The governor's MessageSizes must reflect the llm_hybrid specs and the
+    actual ζ token-stream shapes (B × S_tower × d_model per pod)."""
+    cfg = tiny_cfg()
+    ad = AdaptiveLLMRunner(tiny_model, AdaptiveConfig(total_steps=4))
+    params = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=1)
+    B, S = 4, 8
+    batches = llm_batch_fn(cfg, B, S, n_pods=1, seed=0)(0, 1)
+    sizes = ad._sizes_of(params, batches)(0.0, 0)
+    z_el = B * (S // 2) * cfg.d_model  # per-tower ζ: [B, S/2, d]
+    assert sizes.z1 == z_el * 4 and sizes.z2 == z_el * 4
+    from repro.common.pytree import tree_bytes
+    assert sizes.theta0 == tree_bytes(params["theta0"]) // 1  # G = 1 pod
+    # compressed rung shrinks every billed component consistently
+    c = ad._sizes_of(params, batches)(0.25, 128)
+    assert c.theta0 < sizes.theta0 and c.z1 < sizes.z1 and c.z2 < sizes.z2
+
+
+def test_controller_core_is_runner_agnostic():
+    """The same ControllerCore drives both runners: with fixed probes and a
+    stationary plan, its ledger equals plan_round's own projection."""
+    sizes_of = lambda k, b: CM.MessageSizes(
+        theta0=compressed_bytes(1000, k or 1.0, b) if (k or b) else 4000.0,
+        theta1=8e3, theta2=2e3, z1=1e3, z2=1e3, n_active=1)
+    from repro.common.config import FederationConfig
+
+    cfg = AdaptiveConfig(total_steps=16, max_interval=4)
+    core = ControllerCore(cfg, FederationConfig(num_groups=2), sizes_of,
+                          eta0=0.01, probe={"rho": 2.0, "delta": 0.5,
+                                            "F0": 1.0, "grad_norm_sq": 1.0})
+    fake_stats = {"loss": np.full(16, 1.0), "gnorm2": np.full(16, 1.0),
+                  "delta2": np.full(16, 0.25), "rho": np.full(16, 2.0),
+                  "rho_ok": np.ones(16)}
+    while not core.done:
+        plan, _ = core.plan()
+        stats = {k: v[:plan.P] for k, v in fake_stats.items()}
+        rec = core.record(plan, stats)
+    assert core.steps_done == cfg.total_steps
+    assert rec["bytes_total"] == core.bytes_spent > 0
+    assert [h["round"] for h in core.history] == list(range(len(core.history)))
+
+
+def test_neutral_probe_defaults():
+    from repro.common.config import FederationConfig
+
+    core = ControllerCore(AdaptiveConfig(total_steps=1), FederationConfig(),
+                          lambda k, b: CM.MessageSizes(1, 1, 1, 1, 1, 1),
+                          eta0=0.01)
+    assert core.probe == NEUTRAL_PROBE and core.probe is not NEUTRAL_PROBE
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: the tier-1 guard against the LLM-adaptive path rotting
+# ---------------------------------------------------------------------------
+
+
+def test_train_cli_llm_adaptive_smoke():
+    from repro.launch import train as TR
+
+    out = TR.main(["--arch", "gemma3-1b", "--smoke", "--adaptive",
+                   "--steps", "4", "--batch", "2", "--seq", "16",
+                   "--byte-budget-mb", "1", "--max-interval", "2"])
+    assert out["steps"] == 4 and out["adaptive_rounds"] >= 1
+    assert math.isfinite(out["loss_last"])
+    assert out["adaptive_bytes_total"] > 0

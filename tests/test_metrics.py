@@ -1,0 +1,49 @@
+"""Regression tests for the evaluation metrics (paper Table II columns)."""
+import numpy as np
+import pytest
+
+from repro.core.metrics import auc_roc_ovr, precision_recall_f1
+
+
+def test_macro_f1_is_mean_of_per_class_f1():
+    """Hand-computed 3-class reference. Per class (tp, fp, fn):
+      c0: (1, 1, 1) -> p=1/2, r=1/2, f1=1/2
+      c1: (2, 1, 0) -> p=2/3, r=1,   f1=4/5
+      c2: (2, 0, 1) -> p=1,   r=2/3, f1=4/5
+    macro-P = macro-R = 13/18, so the old harmonic-mean-of-macros bug ALSO
+    returns 13/18 ≈ 0.7222 — while true macro-F1 = (1/2 + 4/5 + 4/5)/3 = 0.7.
+    """
+    y_true = np.array([0, 0, 1, 1, 2, 2, 2])
+    y_pred = np.array([0, 1, 1, 1, 2, 0, 2])
+    m = precision_recall_f1(y_true, y_pred, 3)
+    assert m["precision"] == pytest.approx(13 / 18)
+    assert m["recall"] == pytest.approx(13 / 18)
+    assert m["f1"] == pytest.approx(0.7)
+    assert m["f1"] != pytest.approx(13 / 18)  # the bug's value
+
+
+def test_macro_f1_binary_hand_computed():
+    """Both classes have f1 = 1/3 (tp=1, fp+fn=4 each), so macro-F1 = 1/3;
+    the harmonic mean of macro-P = macro-R = 3/8 would be 3/8."""
+    y_true = np.array([0, 0, 0, 0, 1, 1])
+    y_pred = np.array([0, 1, 1, 1, 1, 0])
+    m = precision_recall_f1(y_true, y_pred, 2)
+    assert m["precision"] == pytest.approx(3 / 8)
+    assert m["recall"] == pytest.approx(3 / 8)
+    assert m["f1"] == pytest.approx(1 / 3)
+
+
+def test_f1_skips_absent_classes_and_perfect_is_one():
+    y = np.array([0, 1, 0, 1])
+    m = precision_recall_f1(y, y, 3)  # class 2 never appears: excluded
+    assert m["precision"] == m["recall"] == m["f1"] == 1.0
+    # a class present only in predictions still counts (f1 = 0 for it):
+    # c0 (tp=1, fn=1) -> 2/3, c1 (tp=2) -> 1, c2 (fp=1) -> 0
+    m2 = precision_recall_f1(np.array([0, 0, 1, 1]), np.array([0, 2, 1, 1]), 3)
+    assert m2["f1"] == pytest.approx((2 / 3 + 1.0 + 0.0) / 3)
+
+
+def test_auc_perfect_separation():
+    y = np.array([0, 0, 1, 1])
+    probs = np.array([[0.9, 0.1], [0.8, 0.2], [0.1, 0.9], [0.2, 0.8]])
+    assert auc_roc_ovr(y, probs) == pytest.approx(1.0)

@@ -290,3 +290,114 @@ def test_comm_cost_increases_with_lambda(Q, lam):
     c_lam = comm_cost_per_iteration(sizes, FederationConfig(local_interval=Q, global_interval=P))
     c_eq = comm_cost_per_iteration(sizes, FederationConfig(local_interval=P, global_interval=P))
     assert c_eq <= c_lam + 1e-9  # P=Q minimizes at fixed P (strategy 1)
+
+
+# ---------------------------------------------------------------------------
+# Byte model monotonicity (the governor's ratchet relies on both)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(64, 4096), st.floats(0.02, 0.98), st.floats(0.02, 0.98),
+       st.sampled_from([0, 2, 16, 128, 1024]))
+@settings(**SETTINGS)
+def test_compressed_bytes_monotone_in_k(n, ka, kb, levels):
+    """Within the top-k regime (0 < k < 1), keeping fewer entries can never
+    cost more wire bytes, at any quantization depth."""
+    from repro.core.compression import compressed_bytes
+
+    lo, hi = sorted((ka, kb))
+    assert compressed_bytes(n, lo, levels) <= compressed_bytes(n, hi, levels) + 1e-9
+
+
+@given(st.integers(64, 4096), st.floats(0.02, 1.0),
+       st.sampled_from([2, 4, 16, 128, 1024]), st.integers(1, 5))
+@settings(**SETTINGS)
+def test_compressed_bytes_monotone_in_b(n, k, b, factor):
+    """Fewer quantization levels -> fewer (or equal: ceil(log2)) bits/value."""
+    from repro.core.compression import compressed_bytes
+
+    assert compressed_bytes(n, k, b) <= compressed_bytes(n, k, b * (2 ** factor)) + 1e-9
+
+
+@given(st.floats(0.05, 0.95), st.floats(0.05, 0.95),
+       st.sampled_from([(2, 16), (16, 128), (128, 1024)]))
+@settings(**SETTINGS)
+def test_message_sizes_monotone_in_k_and_b(ka, kb, bs):
+    """Every compressed component of MessageSizes (θ0, ζ1, ζ2) shrinks (or
+    stays) when k shrinks or when b shrinks — the ladder ordering the byte
+    governor ratchets down is therefore well-founded."""
+    import jax
+
+    from repro.core.comm_model import message_sizes
+
+    params = {
+        "theta0": {"w": jax.ShapeDtypeStruct((64, 64), "float32")},
+        "theta1": {"w": jax.ShapeDtypeStruct((32, 32), "float32")},
+        "theta2": {"w": jax.ShapeDtypeStruct((16, 16), "float32")},
+    }
+    k_lo, k_hi = sorted((ka, kb))
+    b_lo, b_hi = bs
+    for b in (b_lo, b_hi):
+        s_lo = message_sizes(params, 5000, 3000, 4, k_lo, b)
+        s_hi = message_sizes(params, 5000, 3000, 4, k_hi, b)
+        assert s_lo.theta0 <= s_hi.theta0 + 1e-9
+        assert s_lo.z1 <= s_hi.z1 + 1e-9 and s_lo.z2 <= s_hi.z2 + 1e-9
+    for k in (k_lo, k_hi):
+        s_lo = message_sizes(params, 5000, 3000, 4, k, b_lo)
+        s_hi = message_sizes(params, 5000, 3000, 4, k, b_hi)
+        assert s_lo.theta0 <= s_hi.theta0 + 1e-9
+        assert s_lo.z1 <= s_hi.z1 + 1e-9 and s_lo.z2 <= s_hi.z2 + 1e-9
+    # uncompressed components never change with the rung
+    assert message_sizes(params, 1, 1, 4, k_lo, b_lo).theta1 == \
+        message_sizes(params, 1, 1, 4, k_hi, b_hi).theta1
+
+
+# ---------------------------------------------------------------------------
+# Governor ledger: projection == the bytes the controller actually books
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([2, 4, 8]), st.integers(1, 6),
+       st.sampled_from([float("inf"), 1e9, 1e6, 1e3]), st.integers(2, 6))
+@settings(**SETTINGS)
+def test_plan_projection_equals_booked_bytes_under_fixed_probes(
+        max_interval, n_rounds, budget, groups):
+    """With fixed probes the plan is stationary, so plan_round's end-of-run
+    byte projection must EQUAL the sum of the per_round_bytes charges the
+    controller books — round 0's projection is the whole run's bill, and the
+    projection is invariant along the run (a martingale of the ledger)."""
+    import math as _math
+
+    from repro.core.comm_model import MessageSizes, per_round_bytes
+    from repro.core.compression import compressed_bytes
+    from repro.core.controller import AdaptiveConfig, plan_round
+
+    def sizes_of(k, b):
+        n = 10_000
+        comp = compressed_bytes(n, k or 1.0, b) if (k or b) else n * 4.0
+        return MessageSizes(theta0=comp, theta1=4e4, theta2=1e4,
+                            z1=comp / 10, z2=comp / 10, n_active=4)
+
+    # near-zero curvature/noise probes: strategy 2 saturates P at
+    # min(max_interval, T_rem) every round -> a stationary plan
+    probe = {"rho": 1e-3, "delta": 1e-3, "F0": 1.0, "grad_norm_sq": 1.0}
+    T = max_interval * n_rounds
+    cfg = AdaptiveConfig(total_steps=T, byte_budget=budget,
+                         max_interval=max_interval)
+    fed = FederationConfig(num_groups=groups)
+
+    steps_done, booked, rung, eta_prev = 0, 0.0, 0, 0.01
+    projections = []
+    while steps_done < T:
+        plan = plan_round(probe, steps_done, booked, rung, eta_prev,
+                          cfg, fed, sizes_of)
+        assert plan.P == max_interval  # stationary by construction
+        projections.append(plan.projected_bytes)
+        rung = plan.rung
+        booked += per_round_bytes(sizes_of(*cfg.ladder[rung]),
+                                  plan.P, plan.Q, fed.num_groups)
+        steps_done += plan.P
+        eta_prev = plan.eta
+    assert _math.isclose(projections[0], booked, rel_tol=1e-9)
+    for pr in projections[1:]:
+        assert _math.isclose(pr, booked, rel_tol=1e-9)
