@@ -1,0 +1,162 @@
+"""Serving benchmark: compiled engine vs the reconstructed pre-PR path.
+
+For each smoke family (gemma3-1b dense, falcon-mamba SSM, whisper audio)
+measures, after one warmup pass each (compile excluded from both sides):
+
+  * ``sequential`` — the pre-PR serving loop: token-by-token prefill through
+    jitted ``decode_step`` (S dispatches) + one un-donated dispatch and a
+    host-side sample per decode token.
+  * ``engine``     — batched single-pass prefill (one ``dynamic_update_slice``
+    per layer), the generate loop staged as a donating jitted ``lax.scan``
+    per (batch, cache-bucket, block) with on-device sampling, continuous
+    batching on top.
+
+Reported per variant: prefill seconds, decode tokens/s, ms per decode step;
+plus engine compile counts (one executor per bucket) and the speedups the
+acceptance criteria pin (gemma3-1b: >= 10x prefill, >= 3x decode).
+Results land in BENCH_serve.json (schema in benchmarks/README.md).
+
+  PYTHONPATH=src python benchmarks/bench_serve.py [--gen 64] [--batch 4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.common.config import get_config
+from repro.launch.engine import (ServeEngine, sequential_decode,
+                                 sequential_generate, sequential_prefill,
+                                 sequential_step_fn)
+from repro.launch.serve import build_inputs
+
+ARCHS = ("gemma3-1b", "falcon-mamba-7b", "whisper-medium")
+
+
+def _best(fn, reps):
+    """Best-of-N wall time (the CI runner is a noisy 2-core box)."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_sequential(cfg, params, prompts, extra, gen, cache_dtype, reps):
+    B, S = prompts.shape
+    prompts_j = jnp.asarray(prompts)
+    # ONE shared step executor + a full-size warmup run: the timed phases
+    # below re-dispatch the already-compiled step (steady state, matching
+    # the engine side — compiles excluded from BOTH variants)
+    step = sequential_step_fn(cfg)
+    sequential_generate(cfg, params, prompts_j, gen, extra_embeds=extra,
+                        cache_dtype=cache_dtype, step=step)
+
+    def prefill():
+        out = sequential_prefill(cfg, params, prompts_j, S + gen, extra,
+                                 cache_dtype, step=step)
+        jax.block_until_ready(out[0])
+        return out
+
+    prefill_s, (logits, caches) = _best(prefill, reps)
+    decode_s, toks = _best(
+        lambda: sequential_decode(cfg, params, logits, caches, S, gen, step=step),
+        reps)
+    return {
+        "prefill_s": round(prefill_s, 4),
+        "decode_tok_per_s": round(B * gen / decode_s, 1),
+        "ms_per_decode_step": round(1000 * decode_s / gen, 3),
+    }, np.asarray(toks)
+
+
+def bench_engine(cfg, params, prompts, extra, gen, cache_dtype, decode_block, reps):
+    B = prompts.shape[0]
+    engine = ServeEngine(cfg, params, max_batch=B, cache_dtype=cache_dtype,
+                         decode_block=decode_block, temperature=0.0)
+    engine.generate(list(prompts), gen, extra_embeds=extra)  # warmup/compile
+    best, best_rep, toks, prefill_s = float("inf"), None, None, 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        toks, rep = engine.generate(list(prompts), gen, extra_embeds=extra)
+        wall = time.perf_counter() - t0
+        if wall < best:  # every reported metric comes from the SAME best rep
+            best, best_rep = wall, rep
+            prefill_s = max(r["prefill_s"] for r in rep["requests"])
+    decode_s = max(best - prefill_s, 1e-9)
+    return {
+        "prefill_s": round(prefill_s, 4),
+        "decode_tok_per_s": round(B * gen / decode_s, 1),
+        "ms_per_decode_step": round(1000 * decode_s / gen, 3),
+        "tokens_per_s_e2e": best_rep["tokens_per_s"],
+        "compiled_executors": best_rep["compiled_executors"],
+    }, toks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--decode-block", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=5, help="best-of-N timing")
+    ap.add_argument("--cache-dtype", choices=("bf16", "f32"), default="f32",
+                    help="f32 keeps the parity check exact on CPU")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    cache_dtype = jnp.float32 if args.cache_dtype == "f32" else jnp.bfloat16
+
+    results = {"config": {"batch": args.batch, "prompt_len": args.prompt_len,
+                          "gen": args.gen, "decode_block": args.decode_block,
+                          "cache_dtype": args.cache_dtype,
+                          "backend": jax.default_backend()}}
+    print(f"# serving: engine vs pre-PR sequential loop ({jax.default_backend()})")
+    csv_row("arch", "variant", "prefill_s", "decode_tok_per_s", "ms_per_step")
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        params, prompts, extra = build_inputs(cfg, args.batch, args.prompt_len)
+        seq, seq_toks = bench_sequential(cfg, params, prompts, extra, args.gen,
+                                         cache_dtype, args.reps)
+        eng, eng_toks = bench_engine(cfg, params, prompts, extra, args.gen,
+                                     cache_dtype, args.decode_block, args.reps)
+        parity = eng_toks == seq_toks.tolist()
+        entry = {
+            "sequential": seq,
+            "engine": eng,
+            "speedup_prefill": round(seq["prefill_s"] / max(eng["prefill_s"], 1e-9), 2),
+            "speedup_decode": round(
+                eng["decode_tok_per_s"] / max(seq["decode_tok_per_s"], 1e-9), 2),
+            "greedy_tokens_match": bool(parity),
+        }
+        results[arch] = entry
+        csv_row(arch, "sequential", seq["prefill_s"], seq["decode_tok_per_s"],
+                seq["ms_per_decode_step"])
+        csv_row(arch, "engine", eng["prefill_s"], eng["decode_tok_per_s"],
+                eng["ms_per_decode_step"])
+        print(f"# {arch}: prefill {entry['speedup_prefill']:.1f}x, "
+              f"decode {entry['speedup_decode']:.1f}x, "
+              f"greedy parity: {parity}")
+
+    g = results["gemma3-1b"]
+    results["acceptance"] = {
+        "prefill_speedup_ge_10x": g["speedup_prefill"] >= 10.0,
+        "decode_speedup_ge_3x": g["speedup_decode"] >= 3.0,
+        "greedy_tokens_match_all": all(results[a]["greedy_tokens_match"] for a in ARCHS),
+    }
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"# wrote {os.path.abspath(args.out)}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

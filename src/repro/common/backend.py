@@ -1,0 +1,21 @@
+"""Pallas backend selection (leaf module — safe to import from anywhere).
+
+Compiled Mosaic kernels on TPU, interpret mode elsewhere (interpret executes
+the same kernel body for validation). ``REPRO_PALLAS_COMPILED=1/0`` forces
+the choice. Lives under ``repro.common`` so model code can consult it
+without importing kernel modules (kernels transitively import core/model
+code — doing it the other way round is an import cycle).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret only off-TPU; ``REPRO_PALLAS_COMPILED=1/0`` forces it."""
+    env = os.environ.get("REPRO_PALLAS_COMPILED")
+    if env is not None:
+        return env != "1"
+    return jax.default_backend() != "tpu"

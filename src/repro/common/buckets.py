@@ -1,0 +1,19 @@
+"""Power-of-two bucket helpers.
+
+Shared by the adaptive controller (interval snapping keeps the per-(P, Q)
+executor cache bounded) and the serving engine (batch/cache/block shape
+buckets keep the per-bucket executor cache bounded) — one rounding policy,
+one place to change it.
+"""
+from __future__ import annotations
+
+
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1)."""
+    return 1 << max(int(n).bit_length() - 1, 0)
+
+
+def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()

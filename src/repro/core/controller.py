@@ -53,6 +53,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.common.buckets import pow2_floor as _pow2_floor
 from repro.common.config import FederationConfig, TrainConfig
 from repro.common.pytree import tree_size
 from repro.core import comm_model as CM
@@ -107,10 +108,6 @@ class AdaptiveResult(NamedTuple):
     state: HSGDState
     losses: np.ndarray        # [total_steps]
     history: List[Dict[str, Any]]  # one record per executed round
-
-
-def _pow2_floor(n: int) -> int:
-    return 1 << max(int(n).bit_length() - 1, 0)
 
 
 def ladder_from(compression_k: float, quant_levels: int,

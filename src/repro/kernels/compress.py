@@ -35,22 +35,14 @@ reference off-TPU, where interpret-mode Pallas would only add overhead.
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.common.backend import default_interpret  # noqa: F401  (re-export)
 from repro.core.compression import N_REFINE, compress_rows_ref
-
-
-def default_interpret() -> bool:
-    """Interpret only off-TPU; ``REPRO_PALLAS_COMPILED=1/0`` forces it."""
-    env = os.environ.get("REPRO_PALLAS_COMPILED")
-    if env is not None:
-        return env != "1"
-    return jax.default_backend() != "tpu"
 
 
 def _compress_kernel(x_ref, k_ref, len_ref, o_ref, *, levels: int):

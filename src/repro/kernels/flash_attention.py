@@ -9,6 +9,13 @@ tiles with the full head_dim resident.
 Sliding-window attention (gemma3 local layers, zamba2 shared block at
 long_500k) masks per-element; fully-out-of-range blocks contribute zero via
 the masked softmax, matching the pure-jnp oracle `ref.blockwise_attention`.
+The window rides along as a (1, 1) int32 SMEM operand — NOT a static arg —
+so the per-layer window array a `lax.scan` threads through the stacked
+layers (a traced scalar) never forces a recompile per window value.
+
+Backend selection: ``interpret=None`` auto-detects — compiled Mosaic on TPU,
+interpret mode elsewhere (``REPRO_PALLAS_COMPILED`` overrides), the same
+policy as the fused compression kernel.
 """
 from __future__ import annotations
 
@@ -20,11 +27,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.backend import default_interpret
+
 NEG_INF = -2.0e38
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, block_q: int, block_k: int, window: int, seq_len: int):
+def _flash_kernel(win_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_len: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -43,8 +52,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
     ok = (k_pos <= q_pos) & (k_pos < seq_len) & (q_pos < seq_len)
-    if window > 0:
-        ok &= k_pos > (q_pos - window)
+    window = win_ref[0, 0]  # runtime scalar; <=0 means full causal
+    ok &= jnp.where(window > 0, k_pos > (q_pos - window), True)
     s = jnp.where(ok, s, NEG_INF)
 
     m_prev = m_scr[...]  # [bq, 1]
@@ -63,18 +72,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "window", "block_q", "block_k", "interpret")
+    jax.jit, static_argnames=("scale", "block_q", "block_k", "interpret")
 )
 def flash_attention_pallas(
     q: jnp.ndarray,  # [BH, S, D] (batch*heads flattened; kv already expanded to q heads)
     k: jnp.ndarray,  # [BH, S, D]
     v: jnp.ndarray,
     scale: float | None = None,
-    window: int = 0,
+    window=0,  # python int OR traced int scalar; <=0 = full causal
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    if interpret is None:
+        interpret = default_interpret()
     BH, S, D = q.shape
     scale = scale if scale is not None else D ** -0.5
     block_q = min(block_q, S)
@@ -85,14 +96,16 @@ def flash_attention_pallas(
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
     Sp = q.shape[1]
+    win_arr = jnp.asarray(window, jnp.int32).reshape(1, 1)
     grid = (BH, Sp // block_q, Sp // block_k)
     out = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
-            window=window, seq_len=S,
+            seq_len=S,
         ),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
             pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
@@ -105,5 +118,5 @@ def flash_attention_pallas(
             pltpu.VMEM((block_q, D), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(win_arr, q, k, v)
     return out[:, :S]

@@ -32,14 +32,19 @@ def fused_compress(x: jnp.ndarray, k_frac: float, levels: int = 0) -> jnp.ndarra
     return compress_rows(x.reshape(-1, n), k, levels).reshape(shape)
 
 
-def flash_attention(q, k, v, scale=None, window: int = 0):
-    """q,k,v: [B, S, H, D] (kv heads already repeated to H). Causal."""
+def flash_attention(q, k, v, scale=None, window=0):
+    """q,k,v: [B, S, H, D] (kv heads already repeated to H). Causal.
+
+    ``window`` may be a python int OR a traced int scalar (the per-layer
+    window a stacked-layer scan threads through) — it rides into the kernel
+    as an SMEM operand, so varying it never recompiles. Backend autodetect
+    (compiled Mosaic on TPU, interpret elsewhere) happens in the kernel.
+    """
     B, S, H, D = q.shape
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
-    out = flash_attention_pallas(qf, kf, vf, scale=scale, window=window,
-                                 interpret=default_interpret())
+    out = flash_attention_pallas(qf, kf, vf, scale=scale, window=window)
     return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
 
 

@@ -1,0 +1,494 @@
+"""Compiled serving engine: single-pass prefill, scan decode, continuous batching.
+
+The trained global model θ̃ is what e-health institutions actually serve back
+to devices and clinicians, so serving shares the hot-path discipline of the
+training loop (PR 1-3): everything that runs per-request is a cached,
+donating, jitted executor, compiled once per shape bucket.
+
+Three compiled program kinds, each cached exactly like
+``HSGDRunner.round_fn``'s per-(P, Q, k, b) executors:
+
+* **prefill** — ONE forward through the train-path stacks per power-of-two
+  token block, writing KV/SSM/latent caches with a single
+  ``dynamic_update_slice`` per layer (``decode_step`` with [B, S] tokens),
+  replacing S sequential single-token dispatches. Prompts whose length is a
+  power of two prefill in ONE pass; others decompose into at most
+  log2(S) blocks, so the executor cache stays bounded. Long blocks route
+  through the Pallas flash-attention op on TPU (``fresh_cache``).
+* **decode** — the whole generate loop for a block of tokens staged as one
+  donating jitted ``lax.scan`` per (batch, cache-bucket, block): on-device
+  sampling (traced temperature, threaded PRNG key) and per-slot cache write
+  positions, so there is NO per-token host round-trip — one device sync per
+  block, when the scheduler collects tokens.
+* **insert** — continuous batching: one executor copies a prefilled
+  request's cache rows into a freed decode slot, so new arrivals join a
+  running batch without recompiling or restarting it.
+
+``sequential_generate`` / ``sequential_prefill`` keep the reconstructed
+pre-PR serving path (token-by-token prefill, one un-donated dispatch + host
+sample per token) as the parity oracle and benchmark baseline.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.buckets import pow2_ceil as _pow2_at_least
+from repro.common.buckets import pow2_floor as _pow2_at_most
+from repro.common.config import ModelConfig
+from repro.models import transformer as T
+
+
+def sample_token(logits, key, temperature):
+    """[B, V] logits -> [B] int32 next tokens, entirely on device.
+
+    ``temperature`` is traced: ONE executor serves greedy (argmax at 0) and
+    stochastic sampling — re-picking it never recompiles, and temperature
+    applies from the FIRST generated token (the pre-PR loop always argmaxed
+    the first one). ``lax.cond`` picks the branch at runtime, so greedy
+    decode never pays the categorical's gumbel draw (~7x an argmax).
+    """
+    temp = jnp.asarray(temperature, jnp.float32)
+
+    def hot(_):
+        scaled = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+        return jax.random.categorical(key, scaled, axis=-1)
+
+    def greedy(_):
+        return jnp.argmax(logits, axis=-1)
+
+    return jax.lax.cond(temp > 0, hot, greedy, None).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Requests + engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+    extra_embeds: Optional[np.ndarray] = None  # audio: [enc_seq, d_model]
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    prefill_s: float = 0.0
+    tokens: List[int] = field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def finished(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+
+class ServeEngine:
+    """Continuous-batching scheduler over the compiled executors.
+
+    Requests are packed into a padded decode batch of ``max_batch`` slots
+    sharing one power-of-two cache bucket; freed slots are refilled from the
+    waiting queue while the batch keeps decoding (parked slots write
+    out-of-range, which the cache scatter drops). Per-request latency and
+    aggregate tokens/s come back from :meth:`run`.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 cache_dtype=jnp.bfloat16, decode_block: int = 8,
+                 temperature: float = 0.0, seed: int = 0,
+                 max_prefill_block: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = int(max_batch)
+        self.cache_dtype = cache_dtype
+        self.decode_block = int(decode_block)
+        self.temperature = float(temperature)
+        self.max_prefill_block = int(max_prefill_block)
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill_fns: Dict = {}  # (Bp, block, first, cache_len) -> executor
+        self._decode_fns: Dict = {}  # (B, cache_len, block) -> executor
+        self._insert_fns: Dict = {}  # (Bp, B, cache_len) -> executor
+        self._next_rid = 0
+        self.waiting: List[Request] = []
+        self.done: List[Request] = []
+        self._state = None  # live decode batch: caches + host tok/pos/active
+        self._cache_len = 0
+        self._slots: List[Optional[Request]] = []
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, extra_embeds=None) -> int:
+        r = Request(
+            self._next_rid, np.asarray(prompt, np.int32), int(max_new),
+            None if extra_embeds is None else np.asarray(extra_embeds, np.float32),
+            t_submit=time.perf_counter(),
+        )
+        self._next_rid += 1
+        self.waiting.append(r)
+        return r.rid
+
+    def generate(self, prompts, max_new: int, extra_embeds=None):
+        """Submit a batch, drain it, return (tokens per request, report)."""
+        rids = [
+            self.submit(p, max_new, None if extra_embeds is None else extra_embeds[i])
+            for i, p in enumerate(prompts)
+        ]
+        report = self.run()
+        by_id = {r.rid: r for r in self.done}
+        return [by_id[rid].tokens for rid in rids], report
+
+    # -- compiled executors (cached per shape bucket) -----------------------
+
+    def _prefill_fn(self, Bp: int, block: int, first: bool, cache_len: int):
+        # cache_len is part of the bucket: the donated caches' shapes depend
+        # on it, and a silent re-jit would break *_buckets == *_compiles
+        key = (Bp, block, first, cache_len)
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+            cfg, dtype = self.cfg, self.cache_dtype
+
+            if first:
+                # the FIRST block builds its own zero caches inside the jit
+                # (no per-leaf host allocs), runs the audio encoder when the
+                # family has one, and samples the candidate first token on
+                # device — for pow2 prompts the whole prefill is ONE dispatch
+                @jax.jit
+                def fn(params, tokens, key, temperature, enc_embeds=None):
+                    caches = T.init_decode_caches(cfg, Bp, cache_len, dtype)
+                    if cfg.family == "audio":
+                        enc = T.encode_audio(cfg, params, enc_embeds)
+                        caches["enc_out"] = enc.astype(caches["enc_out"].dtype)
+                    logits, caches = T.decode_step(cfg, params, tokens, caches,
+                                                   jnp.int32(0), fresh_cache=True)
+                    tok = sample_token(logits[:, -1], key, temperature)
+                    return tok, caches
+            else:
+
+                @partial(jax.jit, donate_argnums=(1,))
+                def fn(params, caches, tokens, index, key, temperature):
+                    logits, caches = T.decode_step(cfg, params, tokens, caches, index)
+                    tok = sample_token(logits[:, -1], key, temperature)
+                    return tok, caches
+
+            self._prefill_fns[key] = fn
+        return fn
+
+    def _decode_fn(self, B: int, cache_len: int, block: int):
+        key = (B, cache_len, block)
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def fn(params, caches, tok, pos, active, key, temperature):
+                def step(carry, _):
+                    caches, tok, pos, key = carry
+                    # parked slots write at cache_len: out-of-range -> dropped
+                    widx = jnp.where(active, pos, cache_len)
+                    logits, caches = T.decode_step(cfg, params, tok, caches, widx)
+                    key, k1 = jax.random.split(key)
+                    nxt = sample_token(logits[:, -1], k1, temperature)
+                    return (caches, nxt[:, None], pos + 1, key), nxt
+
+                (caches, tok, pos, _), toks = jax.lax.scan(
+                    step, (caches, tok, pos, key), None, length=block)
+                return caches, tok, pos, toks  # toks: [block, B]
+
+            self._decode_fns[key] = fn
+        return fn
+
+    def _insert_fn(self, Bp: int):
+        key = (Bp, self.max_batch, self._cache_len)
+        fn = self._insert_fns.get(key)
+        if fn is None:
+            bx = self._batch_axes(self.max_batch, self._cache_len)
+
+            # ONE dispatch admits the whole prefilled group: row i of the
+            # prefill caches lands in decode slot dst[i]; prefill pad rows
+            # carry dst == max_batch (out of range) and are dropped
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(dec_caches, pre_caches, dst):
+                def cp(d, p, ax):
+                    d2 = jnp.moveaxis(d, ax, 0)
+                    p2 = jnp.moveaxis(p, ax, 0)
+                    d2 = d2.at[dst].set(p2.astype(d2.dtype), mode="drop")
+                    return jnp.moveaxis(d2, 0, ax)
+
+                return jax.tree.map(cp, dec_caches, pre_caches, bx)
+
+            self._insert_fns[key] = fn
+        return fn
+
+    def _batch_axes(self, B: int, cache_len: int):
+        """Pytree of ints: which axis of each cache leaf is the batch axis
+        (kv/ssm leaves are layer-stacked, so it is NOT always axis 0)."""
+        sds, axes = T.make_decode_caches(self.cfg, B, cache_len, self.cache_dtype)
+
+        def is_ax(t):
+            return isinstance(t, tuple) and all(e is None or isinstance(e, str) for e in t)
+
+        ax_leaves = jax.tree_util.tree_flatten(axes, is_leaf=is_ax)[0]
+        sd_leaves, treedef = jax.tree_util.tree_flatten(sds)
+        if len(ax_leaves) != len(sd_leaves):
+            raise AssertionError("cache specs and axes trees diverged")
+        return jax.tree_util.tree_unflatten(
+            treedef, [a.index("batch") for a in ax_leaves])
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Executor-cache sizes + actual XLA compile counts (must agree: one
+        compile per bucket is the whole point)."""
+
+        def compiles(d):
+            return sum(f._cache_size() for f in d.values())
+
+        return {
+            "prefill_buckets": len(self._prefill_fns),
+            "prefill_compiles": compiles(self._prefill_fns),
+            "decode_buckets": len(self._decode_fns),
+            "decode_compiles": compiles(self._decode_fns),
+            "insert_buckets": len(self._insert_fns),
+            "insert_compiles": compiles(self._insert_fns),
+        }
+
+    # -- prefill ------------------------------------------------------------
+
+    def _attn_ring_len(self, cache_len: int) -> Optional[int]:
+        cfg = self.cfg
+        if cfg.family == "hybrid" and cfg.sliding_window:
+            return min(cache_len, cfg.sliding_window)
+        return None
+
+    def _prefill_group(self, group: List[Request], cache_len: int):
+        """Single-pass prefill for same-length requests.
+
+        Returns (sampled first token [Bp] device array, caches)."""
+        cfg = self.cfg
+        S = group[0].prompt.shape[0]
+        Bp = _pow2_at_least(len(group))
+        toks = np.zeros((Bp, S), np.int32)
+        for i, r in enumerate(group):
+            toks[i] = r.prompt
+        toks[len(group):] = toks[0]  # pad rows replay request 0; discarded
+        emb = None
+        if cfg.family == "audio":
+            emb = jnp.asarray(np.stack(
+                [r.extra_embeds for r in group]
+                + [group[0].extra_embeds] * (Bp - len(group))
+            ).astype(np.float32))
+        ring = self._attn_ring_len(cache_len)
+        temp = jnp.float32(self.temperature)
+        idx, tok, caches = 0, None, None
+        while idx < S:
+            blk = min(_pow2_at_most(S - idx), self.max_prefill_block)
+            if ring is not None:
+                # ring-buffered kv (hybrid): blocks may only fill VIRGIN ring
+                # slots. Past the ring boundary a multi-token write would
+                # evict keys still inside the window of the block's own early
+                # queries (the sequential semantics evict ONE position per
+                # token), so the wrapped tail decays to single-token steps.
+                blk = min(blk, _pow2_at_most(ring - idx)) if idx < ring else 1
+            fn = self._prefill_fn(Bp, blk, idx == 0, cache_len)
+            self.key, k1 = jax.random.split(self.key)
+            tb = jnp.asarray(toks[:, idx: idx + blk])
+            if idx == 0:
+                if cfg.family == "audio":
+                    tok, caches = fn(self.params, tb, k1, temp, emb)
+                else:
+                    tok, caches = fn(self.params, tb, k1, temp)
+            else:
+                tok, caches = fn(self.params, caches, tb, jnp.int32(idx), k1, temp)
+            idx += blk
+        return tok, caches
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _required_cache_len(self, r: Request) -> int:
+        return _pow2_at_least(r.prompt.shape[0] + r.max_new)
+
+    def _active_any(self) -> bool:
+        return any(s is not None for s in self._slots)
+
+    def _ensure_state(self, cache_len: int) -> None:
+        if self._state is not None and self._cache_len == cache_len:
+            return
+        B = self.max_batch
+        self._cache_len = cache_len
+        self._state = {
+            "caches": T.init_decode_caches(self.cfg, B, cache_len, self.cache_dtype),
+            "tok": np.zeros((B, 1), np.int32),
+            "pos": np.zeros((B,), np.int32),
+            "active": np.zeros((B,), bool),
+        }
+        self._slots = [None] * B
+
+    def _finish(self, r: Request, now: float) -> None:
+        r.t_done = now
+        self.done.append(r)
+        if r.slot >= 0:
+            self._slots[r.slot] = None
+            self._state["active"][r.slot] = False
+            r.slot = -1
+
+    def _admit(self) -> None:
+        if not self.waiting:
+            return
+        if self._state is None or not self._active_any():
+            # empty batch: (re)size the cache bucket for the waiting set
+            need = max(self._required_cache_len(r) for r in self.waiting)
+            self._ensure_state(max(need, self._cache_len))
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        fitting = [r for r in self.waiting
+                   if self._required_cache_len(r) <= self._cache_len]
+        if not free or not fitting:
+            return
+        # one same-length group per admission: they share ONE prefill pass
+        S0 = fitting[0].prompt.shape[0]
+        group = [r for r in fitting if r.prompt.shape[0] == S0][: len(free)]
+        for r in group:
+            self.waiting.remove(r)
+        t0 = time.perf_counter()
+        first_tok, pre_caches = self._prefill_group(group, self._cache_len)
+        Bp = first_tok.shape[0]
+        first = np.asarray(first_tok)  # the one prefill host sync
+        st = self._state
+        t1 = time.perf_counter()
+        dst = np.full((Bp,), self.max_batch, np.int32)  # pad rows: dropped
+        dst[: len(group)] = free[: len(group)]
+        st["caches"] = self._insert_fn(Bp)(st["caches"], pre_caches, jnp.asarray(dst))
+        for i, r in enumerate(group):
+            slot = free[i]
+            r.slot = slot
+            r.t_admit, r.t_first, r.prefill_s = t0, t1, t1 - t0
+            r.tokens.append(int(first[i]))
+            self._slots[slot] = r
+            st["tok"][slot, 0] = first[i]
+            st["pos"][slot] = r.prompt.shape[0]
+            st["active"][slot] = True
+            if r.finished:  # max_new == 1: done at the prefill sample
+                self._finish(r, t1)
+
+    def _decode_block_run(self) -> None:
+        st = self._state
+        fn = self._decode_fn(self.max_batch, self._cache_len, self.decode_block)
+        self.key, sub = jax.random.split(self.key)
+        caches, tok, pos, toks = fn(
+            self.params, st["caches"], jnp.asarray(st["tok"]),
+            jnp.asarray(st["pos"]), jnp.asarray(st["active"]), sub,
+            jnp.float32(self.temperature),
+        )
+        st["caches"] = caches
+        toks_np = np.asarray(toks)  # the ONE host sync for this block
+        st["tok"], st["pos"] = np.array(tok), np.array(pos)  # writable copies
+        now = time.perf_counter()
+        for b in range(toks_np.shape[0]):
+            for r in list(self._slots):
+                if r is None or r.finished:
+                    continue
+                r.tokens.append(int(toks_np[b, r.slot]))
+                if r.finished:
+                    self._finish(r, now)
+
+    def run(self) -> Dict:
+        """Drain the queue; reports the requests finished during THIS run
+        (``self.done`` keeps accumulating across runs for lookups)."""
+        t_start = time.perf_counter()
+        done_before = len(self.done)
+        while self.waiting or (self._state is not None and self._active_any()):
+            self._admit()
+            if self._state is not None and self._active_any():
+                self._decode_block_run()
+        return self.report(time.perf_counter() - t_start, self.done[done_before:])
+
+    def report(self, wall_s: float, requests: Optional[List[Request]] = None) -> Dict:
+        reqs, gen_total = [], 0
+        for r in sorted(self.done if requests is None else requests,
+                        key=lambda r: r.rid):
+            gen_total += len(r.tokens)
+            reqs.append({
+                "id": r.rid,
+                "prompt_len": int(r.prompt.shape[0]),
+                "new_tokens": len(r.tokens),
+                "queue_s": round(r.t_admit - r.t_submit, 6),
+                "prefill_s": round(r.prefill_s, 6),
+                "first_token_s": round(r.t_first - r.t_submit, 6),
+                "total_s": round(r.t_done - r.t_submit, 6),
+            })
+        return {
+            "requests": reqs,
+            "wall_s": round(wall_s, 6),
+            "generated_tokens": gen_total,
+            "tokens_per_s": round(gen_total / max(wall_s, 1e-9), 1),
+            "compiled_executors": self.compile_counts(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Reconstructed pre-PR serving path (parity oracle + benchmark baseline)
+# ---------------------------------------------------------------------------
+
+
+def sequential_step_fn(cfg: ModelConfig):
+    """The pre-PR per-token executor. Build it ONCE and pass it to repeated
+    ``sequential_*`` calls — each `jax.jit(lambda ...)` is a fresh cache, so
+    benchmarks that want to time steady state (compiles excluded) must share
+    one across their warmup and measured runs."""
+    return jax.jit(lambda p, t, c, i: T.decode_step(cfg, p, t, c, i))
+
+
+def sequential_prefill(cfg: ModelConfig, params, prompts, cache_len: int,
+                       extra_embeds=None, cache_dtype=jnp.float32, step=None):
+    """Token-by-token prefill through jitted ``decode_step`` (S dispatches)."""
+    B, S = prompts.shape
+    caches = T.init_decode_caches(cfg, B, cache_len, cache_dtype)
+    if cfg.family == "audio":
+        enc = T.encode_audio(cfg, params, jnp.asarray(extra_embeds))
+        caches["enc_out"] = enc.astype(caches["enc_out"].dtype)
+    step = step or sequential_step_fn(cfg)
+    logits = None
+    for i in range(S):
+        logits, caches = step(params, prompts[:, i: i + 1], caches, jnp.int32(i))
+    return logits, caches
+
+
+def sequential_decode(cfg: ModelConfig, params, logits, caches, start_pos: int,
+                      gen: int, temperature: float = 0.0, seed: int = 0,
+                      step=None):
+    """The pre-PR decode loop, continuing from prefilled (logits, caches)."""
+    key = jax.random.PRNGKey(seed)
+    step = step or sequential_step_fn(cfg)
+    out = []
+    tok = None
+    for i in range(gen):
+        if i > 0:
+            logits, caches = step(params, tok, caches, jnp.int32(start_pos + i - 1))
+        key, k1 = jax.random.split(key)
+        if temperature > 0:
+            tok = jax.random.categorical(
+                k1, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def sequential_generate(cfg: ModelConfig, params, prompts, gen: int,
+                        temperature: float = 0.0, seed: int = 0,
+                        extra_embeds=None, cache_dtype=jnp.float32,
+                        cache_len: Optional[int] = None, step=None):
+    """One un-donated dispatch + host-side sample per token (the pre-PR loop,
+    with the first-token temperature bug fixed so comparisons are fair)."""
+    B, S = prompts.shape
+    cache_len = cache_len or (S + gen)
+    step = step or sequential_step_fn(cfg)
+    logits, caches = sequential_prefill(cfg, params, prompts, cache_len,
+                                        extra_embeds, cache_dtype, step=step)
+    return sequential_decode(cfg, params, logits, caches, S, gen,
+                             temperature, seed, step=step)

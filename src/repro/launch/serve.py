@@ -1,9 +1,10 @@
-"""Serving launcher: batched autoregressive decoding with a KV/SSM cache.
+"""Serving launcher: thin CLI over the compiled serving engine.
 
-Runs a (reduced) architecture through prefill + N decode steps for a batch of
-requests, reporting per-token latency. This is the serve-side end-to-end
-driver; the production decode path is the same ``decode_step`` the dry-run
-lowers at 32k/500k.
+Runs a (reduced) architecture through the continuous-batching engine —
+batched single-pass prefill + scan-based donated decode with on-device
+sampling — and reports per-request latency, aggregate tokens/s, and the
+executor-cache compile counts. ``--sequential`` runs the reconstructed
+pre-PR token-by-token path instead (the benchmark baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
       --batch 4 --prompt-len 32 --gen 16
@@ -19,42 +20,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import get_config
+from repro.launch.engine import (ServeEngine, sequential_decode,
+                                 sequential_prefill, sequential_step_fn)
 from repro.models import layers as L
 from repro.models import transformer as T
 
+CACHE_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
 
-def prefill_into_cache(cfg, params, tokens, cache_len, extra_embeds=None):
-    """Sequential prefill through decode_step (simple, cache-exact)."""
-    B, S = tokens.shape
-    caches = T.init_decode_caches(cfg, B, cache_len, jnp.float32)
+
+def build_inputs(cfg, batch: int, prompt_len: int, seed: int = 0):
+    """(params, prompts, extra_embeds) for a serve run — shared with
+    benchmarks/bench_serve.py so the CLI and the benchmark can't diverge."""
+    key = jax.random.PRNGKey(seed)
+    params = L.init_params(T.model_specs(cfg), key, jnp.float32)
+    rng = np.random.RandomState(seed)
+    prompts = rng.randint(0, cfg.vocab_size, (batch, prompt_len)).astype(np.int32)
+    extra = None
     if cfg.family == "audio":
-        caches["enc_out"] = encode_audio(cfg, params, extra_embeds)
-    step = jax.jit(lambda p, tok, c, i: T.decode_step(cfg, p, tok, c, i))
-    logits = None
-    for i in range(S):
-        logits, caches = step(params, tokens[:, i : i + 1], caches, jnp.int32(i))
-    return logits, caches, S
-
-
-def encode_audio(cfg, params, enc_embeds):
-    B = enc_embeds.shape[0]
-    enc_pos = jnp.broadcast_to(jnp.arange(enc_embeds.shape[1], dtype=jnp.int32), (B, enc_embeds.shape[1]))
-    x = enc_embeds
-
-    def enc_body(h, layer):
-        p, _ = layer
-        hn = L.apply_norm(cfg.norm, p["norm1"], h)
-        a = T.cross_attention(p["attn"], hn, hn, enc_pos, enc_pos, cfg)
-        h = h + a
-        hn = L.apply_norm(cfg.norm, p["norm2"], h)
-        from repro.models.mlp import mlp_forward
-
-        h = h + mlp_forward(p["mlp"], hn, cfg)
-        return h, None
-
-    zero_w = jnp.zeros((cfg.encoder_layers,), jnp.int32)
-    x, _ = jax.lax.scan(enc_body, x, (params["enc_layers"], zero_w))
-    return L.apply_norm(cfg.norm, params["enc_norm"], x)
+        extra = rng.randn(batch, cfg.encoder_seq, cfg.d_model).astype(np.float32)
+    return params, prompts, extra
 
 
 def main(argv=None):
@@ -67,45 +51,65 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-dtype", choices=sorted(CACHE_DTYPES), default="bf16")
+    ap.add_argument("--decode-block", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="decode slots (0 = --batch)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the reconstructed pre-PR token-by-token path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    key = jax.random.PRNGKey(args.seed)
-    params = L.init_params(T.model_specs(cfg), key, jnp.float32)
-    rng = np.random.RandomState(args.seed)
-    B = args.batch
-    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
-    extra = None
-    if cfg.family == "audio":
-        extra = jnp.asarray(rng.randn(B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    params, prompts, extra = build_inputs(cfg, args.batch, args.prompt_len, args.seed)
 
-    cache_len = args.prompt_len + args.gen
-    t0 = time.time()
-    logits, caches, pos = prefill_into_cache(cfg, params, prompts, cache_len, extra)
-    t_prefill = time.time() - t0
+    if args.sequential:
+        step = sequential_step_fn(cfg)
+        t0 = time.perf_counter()
+        logits, caches = sequential_prefill(
+            cfg, params, jnp.asarray(prompts), args.prompt_len + args.gen,
+            extra, CACHE_DTYPES[args.cache_dtype], step=step)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        toks = sequential_decode(cfg, params, logits, caches, args.prompt_len,
+                                 args.gen, args.temperature, args.seed, step=step)
+        t_decode = max(time.perf_counter() - t0, 1e-9)
+        report = {
+            "arch": args.arch,
+            "mode": "sequential",
+            "batch": args.batch,
+            "prefill_s": round(t_prefill, 3),
+            "decode_tok_per_s": round(args.batch * args.gen / t_decode, 1),
+            "ms_per_decode_step": round(1000 * t_decode / max(args.gen, 1), 2),
+            "wall_s": round(t_prefill + t_decode, 3),
+            "sample_output": np.asarray(toks[0, :8]).tolist(),
+        }
+        print(json.dumps(report, indent=1))
+        return report
 
-    step = jax.jit(lambda p, tok, c, i: T.decode_step(cfg, p, tok, c, i))
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        key, k = jax.random.split(key)
-        logits, caches = step(params, tok, caches, jnp.int32(pos + i))
-        if args.temperature > 0:
-            tok = jax.random.categorical(k, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    out_tokens = jnp.concatenate(generated, axis=1)
+    engine = ServeEngine(
+        cfg, params, max_batch=args.max_batch or args.batch,
+        cache_dtype=CACHE_DTYPES[args.cache_dtype],
+        decode_block=args.decode_block, temperature=args.temperature,
+        seed=args.seed,
+    )
+    toks, rep = engine.generate(list(prompts), args.gen, extra_embeds=extra)
+    prefill_s = max((r["prefill_s"] for r in rep["requests"]), default=0.0)
+    decode_s = max(rep["wall_s"] - prefill_s, 1e-9)
     report = {
         "arch": args.arch,
-        "batch": B,
-        "prefill_s": round(t_prefill, 3),
-        "decode_tok_per_s": round(B * (args.gen - 1) / max(t_decode, 1e-9), 1),
-        "ms_per_decode_step": round(1000 * t_decode / max(args.gen - 1, 1), 2),
-        "sample_output": np.asarray(out_tokens[0, :8]).tolist(),
+        "mode": "engine",
+        "batch": args.batch,
+        "prefill_s": round(prefill_s, 3),
+        # decode-only rate (same basis as ms_per_decode_step and
+        # bench_serve.py); end-to-end throughput is tokens_per_s_e2e
+        "decode_tok_per_s": round(rep["generated_tokens"] / decode_s, 1),
+        "tokens_per_s_e2e": rep["tokens_per_s"],
+        "ms_per_decode_step": round(1000 * decode_s / max(args.gen, 1), 2),
+        "wall_s": rep["wall_s"],
+        "requests": rep["requests"],
+        "compiled_executors": rep["compiled_executors"],
+        "sample_output": toks[0][:8],
     }
     print(json.dumps(report, indent=1))
     return report

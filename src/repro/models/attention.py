@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.common.config import ModelConfig
 from repro.common.sharding import constrain, use_weight
+from repro.common.backend import default_interpret
 from repro.models import layers as L
 
 NEG_INF = -2.0e38
@@ -153,6 +154,48 @@ def _blockwise_sdpa(q, k, v, q_pos, k_pos, scale, window: int, kv_block: int = 1
 BLOCKWISE_THRESHOLD = 2048  # use online-softmax above this Sk (memory roofline)
 
 
+def _long_prefill_attention(q, k, v, positions, scale, window):
+    """Attention for a long contiguous SERVING prefill block at position 0.
+
+    Routed to the Pallas flash kernel when a compiled Mosaic backend is
+    available (TPU — same ``default_interpret()`` autodetect the compression
+    kernel uses); the pure-JAX online-softmax twin runs elsewhere, where
+    interpret-mode Pallas would only add overhead. ``window`` may be a traced
+    per-layer scalar — the kernel takes it as an SMEM operand.
+
+    Inference-only (reached via ``fresh_cache``): the forward-only kernel has
+    no VJP, so the TRAIN path (no kv_cache) must stay on the differentiable
+    ``_blockwise_sdpa`` twin.
+    """
+    if not default_interpret():
+        from repro.kernels.ops import flash_attention
+
+        G = q.shape[2] // k.shape[2]
+        kr = jnp.repeat(k, G, axis=2) if G > 1 else k
+        vr = jnp.repeat(v, G, axis=2) if G > 1 else v
+        return flash_attention(q, kr, vr, scale=scale, window=window)
+    return _blockwise_sdpa(q, k, v, positions, positions, scale, window)
+
+
+def _cache_write(cache, update, index):
+    """Write ``update`` into ``cache`` at ``index`` along axis 1.
+
+    A scalar index writes a contiguous [B, S, ...] span (multi-token prefill,
+    one ``dynamic_update_slice`` per leaf); an int32 [B] vector writes one
+    token per batch row at per-slot positions (continuous batching — freed
+    decode slots sit at different offsets). Out-of-range vector indices are
+    dropped, which lets the serving engine park inactive slots at
+    ``cache_len`` instead of masking.
+    """
+    if jnp.ndim(index) == 1:
+        if update.shape[1] != 1:
+            raise ValueError("per-slot cache writes are single-token (S == 1)")
+        b = jnp.arange(cache.shape[0])
+        return cache.at[b, index].set(update[:, 0].astype(cache.dtype), mode="drop")
+    start = (0, index) + (0,) * (cache.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache, update.astype(cache.dtype), start)
+
+
 def gqa_forward(
     params,
     x,
@@ -162,6 +205,7 @@ def gqa_forward(
     positions_3d=None,
     kv_cache: Optional[Tuple] = None,
     cache_index=None,
+    fresh_cache: bool = False,
 ):
     """Returns (out, new_kv) — new_kv only when kv_cache is given (decode)."""
     hd = cfg.resolved_head_dim
@@ -187,18 +231,34 @@ def gqa_forward(
     if kv_cache is not None:
         ck, cv, cpos = kv_cache
         idx = cache_index
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(
-            cpos, positions.astype(cpos.dtype), (0, idx)
-        )
-        q_pos = positions
-        bias = _decode_bias(q_pos, cpos, window)
-        out = _sdpa(q, ck, cv, bias, scale)
+        ck = _cache_write(ck, k, idx)
+        cv = _cache_write(cv, v, idx)
+        cpos = _cache_write(cpos, positions, idx)
         new_cache = (ck, cv, cpos)
+        Sq, Sk = k.shape[1], ck.shape[1]
+        if fresh_cache:
+            # single-pass prefill into an empty cache: nothing precedes this
+            # block, so attend within the freshly projected K/V — the cache
+            # tail is all masked-out sentinels whose softmax terms are exact
+            # zeros, so skipping it is bit-identical AND O(Sq²) not
+            # O(Sq · cache_len). Long blocks go flash/online-softmax.
+            if Sq > BLOCKWISE_THRESHOLD:
+                out = _long_prefill_attention(q, k, v, positions, scale, window)
+            else:
+                bias = causal_mask_bias(positions, positions, window)
+                out = _sdpa(q, k, v, bias, scale)
+        elif Sq > 1 and Sq * Sk > BLOCKWISE_THRESHOLD ** 2:
+            # later prefill blocks attend against earlier cache content too —
+            # online-softmax over the cache keeps memory O(Sq * kv_block)
+            # (sentinel positions mask the unwritten tail exactly)
+            out = _blockwise_sdpa(q, ck, cv, positions, cpos, scale, window)
+        else:
+            bias = _decode_bias(positions, cpos, window)
+            out = _sdpa(q, ck, cv, bias, scale)
     else:
         Sk = k.shape[1]
         if Sk > BLOCKWISE_THRESHOLD:
+            # train path: must stay differentiable (jax.grad flows through)
             out = _blockwise_sdpa(q, k, v, positions, positions, scale, window)
         else:
             bias = causal_mask_bias(positions, positions, window)
@@ -237,6 +297,7 @@ def mla_forward(
     window: int = 0,
     kv_cache: Optional[Tuple] = None,
     cache_index=None,
+    fresh_cache: bool = False,
     **_,
 ):
     nope, rope_d, vd = cfg.resolved_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -267,9 +328,9 @@ def mla_forward(
         # per-step cost is O(B·H·S·r) instead of O(B·S·r·H·(d_n+d_v)).
         c_lat, c_rope, cpos = kv_cache
         idx = cache_index
-        c_lat = jax.lax.dynamic_update_slice(c_lat, latent.astype(c_lat.dtype), (0, idx, 0))
-        c_rope = jax.lax.dynamic_update_slice(c_rope, k_rope.astype(c_rope.dtype), (0, idx, 0))
-        cpos = jax.lax.dynamic_update_slice(cpos, positions.astype(cpos.dtype), (0, idx))
+        c_lat = _cache_write(c_lat, latent, idx)
+        c_rope = _cache_write(c_rope, k_rope, idx)
+        cpos = _cache_write(cpos, positions, idx)
         new_cache = (c_lat, c_rope, cpos)
 
         wk_abs = wkv_b[..., :nope]  # [r, H, nope]

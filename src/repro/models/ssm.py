@@ -96,19 +96,20 @@ def chunked_linear_recurrence(a, b, h0, project=None, aux=None):
     output [B, T, C] leaves the scan. Without it, returns the raw states.
     """
     B, T = a.shape[0], a.shape[1]
-    nchunk = (T + CHUNK - 1) // CHUNK
-    pad = nchunk * CHUNK - T
+    K = min(CHUNK, T)  # never pad a short sequence (decode: T=1) up to CHUNK
+    nchunk = (T + K - 1) // K
+    pad = nchunk * K - T
     if pad:
         a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2), constant_values=1.0)
         b = jnp.pad(b, ((0, 0), (0, pad)) + ((0, 0),) * (b.ndim - 2))
         if aux is not None:
             aux = jnp.pad(aux, ((0, 0), (0, pad)) + ((0, 0),) * (aux.ndim - 2))
-    a = a.reshape((B, nchunk, CHUNK) + a.shape[2:])
-    b = b.reshape((B, nchunk, CHUNK) + b.shape[2:])
-    a = jnp.moveaxis(a, 1, 0)  # [nchunk, B, CHUNK, ...]
+    a = a.reshape((B, nchunk, K) + a.shape[2:])
+    b = b.reshape((B, nchunk, K) + b.shape[2:])
+    a = jnp.moveaxis(a, 1, 0)  # [nchunk, B, K, ...]
     b = jnp.moveaxis(b, 1, 0)
     if aux is not None:
-        aux = jnp.moveaxis(aux.reshape((B, nchunk, CHUNK) + aux.shape[2:]), 1, 0)
+        aux = jnp.moveaxis(aux.reshape((B, nchunk, K) + aux.shape[2:]), 1, 0)
 
     def chunk_step(h, xs):
         hs, h_last = _chunk_recurrence(xs[0], xs[1], h)
@@ -119,7 +120,7 @@ def chunked_linear_recurrence(a, b, h0, project=None, aux=None):
     body = chunk_step if aux is not None else (lambda h, ab: chunk_step(h, ab))
     h_final, outs = jax.lax.scan(body, h0, xs)
     outs = jnp.moveaxis(outs, 0, 1)
-    outs = outs.reshape((B, nchunk * CHUNK) + outs.shape[3:])
+    outs = outs.reshape((B, nchunk * K) + outs.shape[3:])
     return outs[:, :T], h_final
 
 
@@ -145,12 +146,12 @@ def _chunk_recurrence(ac, bc, h):
     return jnp.moveaxis(hs, 0, 1), h_last
 
 
-def _to_chunks(x, nchunk, pad):
-    """[B, T, ...] -> [nchunk, B, K, ...] (pad with zeros)."""
+def _to_chunks(x, nchunk, pad, chunk=CHUNK):
+    """[B, T, ...] -> [nchunk, B, chunk, ...] (pad with zeros)."""
     B = x.shape[0]
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
-    x = x.reshape((B, nchunk, CHUNK) + x.shape[2:])
+    x = x.reshape((B, nchunk, chunk) + x.shape[2:])
     return jnp.moveaxis(x, 1, 0)
 
 
@@ -196,9 +197,12 @@ def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     h0 = state[1].astype(jnp.float32) if state is not None else jnp.zeros((B, d_in, N), jnp.float32)
 
     # chunked scan with a/bx construction fused INSIDE the chunk: the state
-    # history [B, T, d_in, N] never exists — only [B, CHUNK, d_in, N] does.
-    nchunk = (T + CHUNK - 1) // CHUNK
-    pad = nchunk * CHUNK - T
+    # history [B, T, d_in, N] never exists — only [B, K, d_in, N] does. K
+    # tracks T downward so a single decode token (T=1) is ONE recurrence
+    # step, not a 256-step padded scan — the serve-path hot loop.
+    K = min(CHUNK, T)
+    nchunk = (T + K - 1) // K
+    pad = nchunk * K - T
     xcf = xc.astype(jnp.float32)
 
     def chunk_body(h, xs):
@@ -209,10 +213,10 @@ def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
         yc = jnp.einsum("bkcn,bkn->bkc", hs, Cc)
         return hl, yc
 
-    xs = tuple(_to_chunks(v, nchunk, pad) for v in
+    xs = tuple(_to_chunks(v, nchunk, pad, K) for v in
                (dt, xcf, Bm.astype(jnp.float32), Cm.astype(jnp.float32)))
     h_final, ys = jax.lax.scan(chunk_body, h0, xs)
-    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * CHUNK, d_in)[:, :T]
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * K, d_in)[:, :T]
     y = y + params["d_skip"].astype(jnp.float32) * xcf
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
     w_out = use_weight(params["w_out"], ("ssm_inner", "embed"))
@@ -253,8 +257,9 @@ def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
         if state is not None
         else jnp.zeros((B, H, P, N), jnp.float32)
     )
-    nchunk = (T + CHUNK - 1) // CHUNK
-    pad = nchunk * CHUNK - T
+    K = min(CHUNK, T)  # T=1 decode: one recurrence step, not a padded CHUNK
+    nchunk = (T + K - 1) // K
+    pad = nchunk * K - T
     xsf = xs.astype(jnp.float32)
 
     def chunk_body(h, cs):
@@ -268,10 +273,10 @@ def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
         yc = jnp.einsum("bkhpn,bkn->bkhp", hs, Cc)
         return hl, yc
 
-    cs = tuple(_to_chunks(v, nchunk, pad) for v in
+    cs = tuple(_to_chunks(v, nchunk, pad, K) for v in
                (dt, xsf, Bm.astype(jnp.float32), Cm.astype(jnp.float32)))
     h_final, ys = jax.lax.scan(chunk_body, h0, cs)
-    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * CHUNK, H, P)[:, :T]
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * K, H, P)[:, :T]
     y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xsf
     y = y.reshape(B, T, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32))

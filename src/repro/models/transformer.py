@@ -67,11 +67,13 @@ def stack_specs(cfg: ModelConfig, n_layers: int, kind: str) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def attn_mlp_block(params, x, positions, cfg, window, kv_cache=None, cache_index=None, positions_3d=None):
+def attn_mlp_block(params, x, positions, cfg, window, kv_cache=None, cache_index=None,
+                   positions_3d=None, fresh_cache=False):
     h = L.apply_norm(cfg.norm, params["norm1"], x)
     a, new_cache = A.attention_forward(
         params["attn"], h, positions, cfg, window=window,
         kv_cache=kv_cache, cache_index=cache_index, positions_3d=positions_3d,
+        fresh_cache=fresh_cache,
     )
     x = x + a
     h = L.apply_norm(cfg.norm, params["norm2"], x)
@@ -79,11 +81,12 @@ def attn_mlp_block(params, x, positions, cfg, window, kv_cache=None, cache_index
     return x, new_cache
 
 
-def attn_moe_block(params, x, positions, cfg, window, kv_cache=None, cache_index=None):
+def attn_moe_block(params, x, positions, cfg, window, kv_cache=None, cache_index=None,
+                   fresh_cache=False):
     h = L.apply_norm(cfg.norm, params["norm1"], x)
     a, new_cache = A.attention_forward(
         params["attn"], h, positions, cfg, window=window,
-        kv_cache=kv_cache, cache_index=cache_index,
+        kv_cache=kv_cache, cache_index=cache_index, fresh_cache=fresh_cache,
     )
     x = x + a
     h = L.apply_norm(cfg.norm, params["norm2"], x)
@@ -142,20 +145,22 @@ def mamba_stack_forward(params, x, cfg, remat=True):
 # decode variants: scan threads the per-layer cache --------------------------
 
 
-def dense_stack_decode(params, x, positions, cfg, windows, caches, cache_index):
+def dense_stack_decode(params, x, positions, cfg, windows, caches, cache_index, fresh_cache=False):
     def body(xc, layer):
         p, win, cache = layer
-        y, new_cache = attn_mlp_block(p, xc, positions, cfg, win, kv_cache=cache, cache_index=cache_index)
+        y, new_cache = attn_mlp_block(p, xc, positions, cfg, win, kv_cache=cache,
+                                      cache_index=cache_index, fresh_cache=fresh_cache)
         return y, new_cache
 
     x, new_caches = jax.lax.scan(body, x, (params, windows, caches))
     return x, new_caches
 
 
-def moe_stack_decode(params, x, positions, cfg, windows, caches, cache_index):
+def moe_stack_decode(params, x, positions, cfg, windows, caches, cache_index, fresh_cache=False):
     def body(xc, layer):
         p, win, cache = layer
-        y, new_cache, _ = attn_moe_block(p, xc, positions, cfg, win, kv_cache=cache, cache_index=cache_index)
+        y, new_cache, _ = attn_moe_block(p, xc, positions, cfg, win, kv_cache=cache,
+                                         cache_index=cache_index, fresh_cache=fresh_cache)
         return y, new_cache
 
     x, new_caches = jax.lax.scan(body, x, (params, windows, caches))
@@ -322,12 +327,15 @@ def hybrid_forward(params, x, positions, cfg, windows, remat=True, force_window=
     return x
 
 
-def audio_forward(params, dec_tokens_embedded, enc_embeds, positions, cfg, remat=True):
-    """whisper: encoder over stubbed frames, decoder w/ interleaved cross-attn."""
-    B = dec_tokens_embedded.shape[0]
-    Se = enc_embeds.shape[1]
+def encode_audio(cfg, params, enc_embeds, remat=False):
+    """whisper encoder over stubbed frame embeddings -> [B, Se, D].
+
+    The ONE encoder entry point: the training forward (``audio_forward``) and
+    the serving engine's prefill both run it; encoder output is computed once
+    per request and carried in the decode caches as ``enc_out``.
+    """
+    B, Se = enc_embeds.shape[0], enc_embeds.shape[1]
     enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
-    enc = enc_embeds.astype(dec_tokens_embedded.dtype)
     zero_w = jnp.zeros((cfg.encoder_layers,), jnp.int32)
 
     def enc_body(h, layer):
@@ -340,8 +348,16 @@ def audio_forward(params, dec_tokens_embedded, enc_embeds, positions, cfg, remat
         h = h + mlp_forward(p["mlp"], hn, cfg)
         return h, None
 
-    enc, _ = jax.lax.scan(_remat(enc_body, remat), enc, (params["enc_layers"], zero_w))
-    enc = L.apply_norm(cfg.norm, params["enc_norm"], enc)
+    enc, _ = jax.lax.scan(_remat(enc_body, remat), enc_embeds, (params["enc_layers"], zero_w))
+    return L.apply_norm(cfg.norm, params["enc_norm"], enc)
+
+
+def audio_forward(params, dec_tokens_embedded, enc_embeds, positions, cfg, remat=True):
+    """whisper: encoder over stubbed frames, decoder w/ interleaved cross-attn."""
+    B = dec_tokens_embedded.shape[0]
+    Se = enc_embeds.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    enc = encode_audio(cfg, params, enc_embeds.astype(dec_tokens_embedded.dtype), remat)
 
     x = dec_tokens_embedded
     Sd = x.shape[1]
@@ -500,19 +516,37 @@ def init_decode_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.b
     return jax.tree.map(init_one, sds, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
-def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=False):
-    """tokens: [B, 1] next token ids; index: scalar cache write position.
+def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=False,
+                fresh_cache=False):
+    """One cache-threading forward: single decode token OR a whole prefill block.
 
-    Returns (logits [B, 1, V], new_caches).
+    tokens: [B, S] token ids (S == 1 for classic decode). ``index`` is either
+    a scalar cache write position — the S tokens land contiguously at
+    [index, index + S) with ONE ``dynamic_update_slice`` per layer (batched
+    single-pass prefill) — or an int32 [B] vector of per-slot positions
+    (S == 1; the serving engine's continuous batching, where freed slots sit
+    at different depths). ``fresh_cache`` (static) asserts nothing precedes
+    this write in the cache, routing long prefill blocks through the flash
+    attention path instead of cache-wide scores.
+
+    Returns (logits [B, S, V], new_caches).
     """
-    B = tokens.shape[0]
+    B, S = tokens.shape
     x = L.embed(params["embed"], tokens)
     x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
-    positions = jnp.full((B, 1), index, jnp.int32)
+    if jnp.ndim(index) == 1:
+        if S != 1:
+            raise ValueError("per-slot decode (vector index) is single-token")
+        positions = jnp.asarray(index, jnp.int32)[:, None]
+    else:
+        positions = jnp.broadcast_to(
+            jnp.asarray(index, jnp.int32) + jnp.arange(S, dtype=jnp.int32), (B, S)
+        )
     windows = layer_windows(cfg, cfg.num_layers, force_window)
 
     if cfg.family in ("dense", "vlm"):
-        x, new_kv = dense_stack_decode(params["layers"], x, positions, cfg, windows, caches["kv"], index)
+        x, new_kv = dense_stack_decode(params["layers"], x, positions, cfg, windows,
+                                       caches["kv"], index, fresh_cache)
         new_caches = {"kv": new_kv}
     elif cfg.family == "moe":
         nd = cfg.first_dense_layers
@@ -520,11 +554,14 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=Fa
         if nd:
             head_kv = jax.tree.map(lambda a: a[:nd], kv)
             tail_kv = jax.tree.map(lambda a: a[nd:], kv)
-            x, new_head = dense_stack_decode(params["dense_layers"], x, positions, cfg, windows[:nd], head_kv, index)
-            x, new_tail = moe_stack_decode(params["layers"], x, positions, cfg, windows[nd:], tail_kv, index)
+            x, new_head = dense_stack_decode(params["dense_layers"], x, positions, cfg,
+                                             windows[:nd], head_kv, index, fresh_cache)
+            x, new_tail = moe_stack_decode(params["layers"], x, positions, cfg,
+                                           windows[nd:], tail_kv, index, fresh_cache)
             new_kv = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), new_head, new_tail)
         else:
-            x, new_kv = moe_stack_decode(params["layers"], x, positions, cfg, windows, kv, index)
+            x, new_kv = moe_stack_decode(params["layers"], x, positions, cfg, windows,
+                                         kv, index, fresh_cache)
         new_caches = {"kv": new_kv}
     elif cfg.family == "ssm":
         x, new_ssm = mamba_stack_decode(params["layers"], x, cfg, caches["ssm"])
@@ -532,7 +569,7 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=Fa
     elif cfg.family == "hybrid":
         x, new_caches = _hybrid_decode(cfg, params, x, positions, caches, index)
     elif cfg.family == "audio":
-        x, new_caches = _audio_decode(cfg, params, x, positions, caches, index)
+        x, new_caches = _audio_decode(cfg, params, x, positions, caches, index, fresh_cache)
     else:
         raise ValueError(cfg.family)
 
@@ -576,7 +613,7 @@ def _shared_attn_decode(cfg, p, x, positions, cache, write_idx, window):
     return x, new_cache
 
 
-def _audio_decode(cfg, params, x, positions, caches, index):
+def _audio_decode(cfg, params, x, positions, caches, index, fresh_cache=False):
     enc = caches["enc_out"]
     B, Se = enc.shape[0], enc.shape[1]
     enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
@@ -584,7 +621,8 @@ def _audio_decode(cfg, params, x, positions, caches, index):
     def body(xc, layer):
         p_self, p_cross, cache = layer
         h = L.apply_norm(cfg.norm, p_self["norm1"], xc)
-        a, new_cache = A.gqa_forward(p_self["attn"], h, positions, cfg, window=0, kv_cache=cache, cache_index=index)
+        a, new_cache = A.gqa_forward(p_self["attn"], h, positions, cfg, window=0,
+                                     kv_cache=cache, cache_index=index, fresh_cache=fresh_cache)
         xc = xc + a
         h = L.apply_norm(cfg.norm, p_self["norm2"], xc)
         xc = xc + mlp_forward(p_self["mlp"], h, cfg)
