@@ -23,6 +23,19 @@ Three compiled program kinds, each cached exactly like
 * **insert** — continuous batching: one executor copies a prefilled
   request's cache rows into a freed decode slot, so new arrivals join a
   running batch without recompiling or restarting it.
+* **spec** (PR 6, opt-in via ``spec_gamma``) — self-speculative decoding:
+  each scan round drafts γ tokens with truncated-depth passes (the first
+  ``spec_draft_layers`` of the stacked scan) and verifies them with ONE
+  multi-token full pass, accepting the longest matching prefix. Every
+  emitted token comes from the full model's argmax, so greedy output is
+  losslessly identical; one executor per (batch, cache-bucket, block, γ,
+  draft-layers).
+* **harvest** (PR 6, opt-in via ``prefix_cache``) — prefix caching: after a
+  prefill whose pow2 prompt head missed the store, one executor masks the
+  cache back to exactly-p-tokens state; the rows land in a device-resident
+  LRU store keyed by prompt-head digest, and later requests with the same
+  head seed their caches from the store (a batch-axis concat, never a host
+  round-trip) and skip recomputing those p tokens.
 
 ``sequential_generate`` / ``sequential_prefill`` keep the reconstructed
 pre-PR serving path (token-by-token prefill, one un-donated dispatch + host
@@ -30,7 +43,9 @@ sample per token) as the parity oracle and benchmark baseline.
 """
 from __future__ import annotations
 
+import hashlib
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Dict, List, Optional
@@ -43,6 +58,27 @@ from repro.common.buckets import pow2_ceil as _pow2_at_least
 from repro.common.buckets import pow2_floor as _pow2_at_most
 from repro.common.config import ModelConfig
 from repro.models import transformer as T
+
+CACHE_DTYPES = {
+    "int8": jnp.int8,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    "f16": jnp.float16, "float16": jnp.float16,
+    "f32": jnp.float32, "float32": jnp.float32,
+}
+
+
+def parse_cache_dtype(value):
+    """CLI string (or dtype-like) -> cache dtype, failing FAST with the list
+    of supported names instead of deep inside cache init."""
+    if not isinstance(value, str):
+        return value
+    try:
+        return CACHE_DTYPES[value.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unsupported cache dtype {value!r}; choose one of "
+            f"{sorted(CACHE_DTYPES)}"
+        ) from None
 
 
 def sample_token(logits, key, temperature):
@@ -103,18 +139,43 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  cache_dtype=jnp.bfloat16, decode_block: int = 8,
                  temperature: float = 0.0, seed: int = 0,
-                 max_prefill_block: int = 4096):
+                 max_prefill_block: int = 4096,
+                 spec_gamma: int = 0, spec_draft_layers: Optional[int] = None,
+                 prefix_cache: bool = False, prefix_min_len: int = 8,
+                 prefix_store_max: int = 32):
         self.cfg = cfg
         self.params = params
         self.max_batch = int(max_batch)
-        self.cache_dtype = cache_dtype
+        self.cache_dtype = parse_cache_dtype(cache_dtype)
         self.decode_block = int(decode_block)
         self.temperature = float(temperature)
         self.max_prefill_block = int(max_prefill_block)
+        self.spec_gamma = int(spec_gamma)
+        if self.spec_gamma:
+            if not T.supports_self_speculation(cfg):
+                raise ValueError(
+                    f"speculative decoding unsupported for family "
+                    f"{cfg.family!r}: recurrent state cannot roll back "
+                    f"rejected drafts")
+            if self.temperature > 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: lossless "
+                    "acceptance compares against argmax targets")
+        self.spec_draft_layers = (
+            int(spec_draft_layers) if spec_draft_layers
+            else max(1, cfg.num_layers // 2))
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_min_len = int(prefix_min_len)
+        self.prefix_store_max = int(prefix_store_max)
         self.key = jax.random.PRNGKey(seed)
         self._prefill_fns: Dict = {}  # (Bp, block, first, cache_len) -> executor
         self._decode_fns: Dict = {}  # (B, cache_len, block) -> executor
         self._insert_fns: Dict = {}  # (Bp, B, cache_len) -> executor
+        self._spec_fns: Dict = {}  # (B, cache_len, block, gamma, dk) -> executor
+        self._harvest_fns: Dict = {}  # (Bp, p, cache_len) -> executor
+        self._prefix_store: OrderedDict = OrderedDict()  # (digest, p, L) -> rows
+        self._spec_stats = {"drafted": 0, "accepted": 0}
+        self._prefix_stats = {"hits": 0, "misses": 0, "seeded_tokens": 0}
         self._next_rid = 0
         self.waiting: List[Request] = []
         self.done: List[Request] = []
@@ -163,8 +224,7 @@ class ServeEngine:
                 def fn(params, tokens, key, temperature, enc_embeds=None):
                     caches = T.init_decode_caches(cfg, Bp, cache_len, dtype)
                     if cfg.family == "audio":
-                        enc = T.encode_audio(cfg, params, enc_embeds)
-                        caches["enc_out"] = enc.astype(caches["enc_out"].dtype)
+                        caches = T.seed_audio_caches(cfg, params, caches, enc_embeds)
                     logits, caches = T.decode_step(cfg, params, tokens, caches,
                                                    jnp.int32(0), fresh_cache=True)
                     tok = sample_token(logits[:, -1], key, temperature)
@@ -226,9 +286,78 @@ class ServeEngine:
             self._insert_fns[key] = fn
         return fn
 
-    def _batch_axes(self, B: int, cache_len: int):
-        """Pytree of ints: which axis of each cache leaf is the batch axis
-        (kv/ssm leaves are layer-stacked, so it is NOT always axis 0)."""
+    def _spec_fn(self, B: int, cache_len: int, block: int, gamma: int, dk: int):
+        key = (B, cache_len, block, gamma, dk)
+        fn = self._spec_fns.get(key)
+        if fn is None:
+            cfg = self.cfg
+
+            # One scan round = draft γ truncated-depth tokens + ONE full-model
+            # verify over [last committed, d1..dγ]; every emitted token is the
+            # full model's argmax (full_next[:, :n_acc + 1]), so greedy output
+            # is bit-identical to plain decode. Rejected columns hold stale
+            # K/V, but the cache column == sequence position here, and writes
+            # precede reads, so each stale column is overwritten before any
+            # query can attend it.
+            @partial(jax.jit, donate_argnums=(1,))
+            def fn(params, caches, tok, pos, active):
+                def spec_round(carry, _):
+                    caches, tok, pos = carry
+
+                    def draft(c, _):
+                        caches, t, p = c
+                        widx = jnp.where(active, p, cache_len)
+                        logits, caches = T.draft_decode_step(
+                            cfg, params, t, caches, widx, dk)
+                        nt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                        return (caches, nt[:, None], p + 1), nt
+
+                    (caches, _, _), drafts = jax.lax.scan(
+                        draft, (caches, tok, pos), None, length=gamma)
+                    drafts = jnp.moveaxis(drafts, 0, 1)  # [B, gamma]
+                    blk = jnp.concatenate([tok, drafts], axis=1)  # [B, gamma+1]
+                    widx = jnp.where(active, pos, cache_len)
+                    logits, caches = T.decode_step(cfg, params, blk, caches, widx)
+                    full_next = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                    match = (drafts == full_next[:, :-1]).astype(jnp.int32)
+                    n_acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)  # [B]
+                    nxt = jnp.take_along_axis(full_next, n_acc[:, None], axis=1)
+                    return (caches, nxt, pos + n_acc + 1), (full_next, n_acc + 1)
+
+                (caches, tok, pos), (toks, n_emit) = jax.lax.scan(
+                    spec_round, (caches, tok, pos), None, length=block)
+                # toks: [block, B, gamma+1]; n_emit: [block, B]
+                return caches, tok, pos, toks, n_emit
+
+            self._spec_fns[key] = fn
+        return fn
+
+    def _harvest_fn(self, Bp: int, p: int, cache_len: int):
+        key = (Bp, p, cache_len)
+        fn = self._harvest_fns.get(key)
+        if fn is None:
+            seq_ax = self._cache_axis(Bp, cache_len, "cache_seq")
+
+            # roll the cache back to exactly-p-tokens state: columns >= p
+            # revert to the init values (zeros; INT32_MAX position sentinel),
+            # making the harvested rows a deterministic replay of the prefix
+            @jax.jit
+            def fn(caches):
+                def mask(c, ax):
+                    keep_shape = [1] * c.ndim
+                    keep_shape[ax] = c.shape[ax]
+                    keep = (jnp.arange(c.shape[ax]) < p).reshape(keep_shape)
+                    init = jnp.iinfo(jnp.int32).max if c.dtype == jnp.int32 else 0
+                    return jnp.where(keep, c, jnp.asarray(init, c.dtype))
+
+                return jax.tree.map(mask, caches, seq_ax)
+
+            self._harvest_fns[key] = fn
+        return fn
+
+    def _cache_axis(self, B: int, cache_len: int, name: str):
+        """Pytree of ints: which axis of each cache leaf carries logical axis
+        ``name`` (kv/ssm leaves are layer-stacked, so it is NOT always 0)."""
         sds, axes = T.make_decode_caches(self.cfg, B, cache_len, self.cache_dtype)
 
         def is_ax(t):
@@ -239,7 +368,10 @@ class ServeEngine:
         if len(ax_leaves) != len(sd_leaves):
             raise AssertionError("cache specs and axes trees diverged")
         return jax.tree_util.tree_unflatten(
-            treedef, [a.index("batch") for a in ax_leaves])
+            treedef, [a.index(name) for a in ax_leaves])
+
+    def _batch_axes(self, B: int, cache_len: int):
+        return self._cache_axis(B, cache_len, "batch")
 
     def compile_counts(self) -> Dict[str, int]:
         """Executor-cache sizes + actual XLA compile counts (must agree: one
@@ -255,6 +387,10 @@ class ServeEngine:
             "decode_compiles": compiles(self._decode_fns),
             "insert_buckets": len(self._insert_fns),
             "insert_compiles": compiles(self._insert_fns),
+            "spec_buckets": len(self._spec_fns),
+            "spec_compiles": compiles(self._spec_fns),
+            "harvest_buckets": len(self._harvest_fns),
+            "harvest_compiles": compiles(self._harvest_fns),
         }
 
     # -- prefill ------------------------------------------------------------
@@ -264,6 +400,71 @@ class ServeEngine:
         if cfg.family == "hybrid" and cfg.sliding_window:
             return min(cache_len, cfg.sliding_window)
         return None
+
+    # -- prefix caching -----------------------------------------------------
+
+    def _prefix_enabled(self) -> bool:
+        # attention families only: their cache rows are pure positional K/V.
+        # SSM/hybrid states entangle the whole prefix; audio cross K/V depend
+        # on per-request encoder input, so neither can share prompt heads.
+        return self.prefix_cache and self.cfg.family in ("dense", "vlm", "moe")
+
+    def _prefix_len(self, S: int) -> int:
+        """pow2 prompt-head length to share; 0 when too short to bother.
+        Strictly < S so at least one block still prefills (first-token
+        logits must come from a real forward)."""
+        p = _pow2_at_most(max(S - 1, 1))
+        return p if self.prefix_min_len <= p < S else 0
+
+    @staticmethod
+    def _prefix_key(prompt: np.ndarray, p: int, cache_len: int):
+        return (hashlib.sha1(prompt[:p].tobytes()).hexdigest(), p, cache_len)
+
+    def _try_seed_prefix(self, group: List[Request], Bp: int, cache_len: int):
+        """(p, seeded caches | None): caches covering the first p tokens,
+        concatenated from stored DEVICE rows when EVERY row in the group
+        hits; a single miss falls back to full prefill (p says what to
+        harvest afterwards). Store rows never cross to the host — seeding
+        and harvesting stay async device work, so a hit replaces p tokens
+        of prefill compute with a batch-axis copy."""
+        S = group[0].prompt.shape[0]
+        p = self._prefix_len(S)
+        if not p:
+            return 0, None
+        keys = [self._prefix_key(r.prompt, p, cache_len) for r in group]
+        if any(k not in self._prefix_store for k in keys):
+            self._prefix_stats["misses"] += len(group)
+            return p, None
+        rows = [self._prefix_store[k] for k in keys]
+        for k in keys:
+            self._prefix_store.move_to_end(k)
+        self._prefix_stats["hits"] += len(group)
+        self._prefix_stats["seeded_tokens"] += p * len(group)
+        rows += [rows[0]] * (Bp - len(rows))  # pad rows replay request 0
+        bx = self._batch_axes(Bp, cache_len)
+        # jnp.copy for Bp == 1: a bare concatenate may alias the stored row,
+        # and the prefill executor DONATES its cache argument — an aliased
+        # buffer would be deleted out from under the store
+        caches = jax.tree.map(
+            lambda ax, *leaves: (jnp.concatenate(leaves, axis=ax)
+                                 if len(leaves) > 1 else jnp.copy(leaves[0])),
+            bx, *rows)
+        return p, caches
+
+    def _harvest_prefixes(self, group, Bp: int, p: int, cache_len: int, caches):
+        """Store each row's exactly-p-tokens cache state (one compiled mask
+        pass + per-row device slices per MISS group — no host sync; hits
+        never pay this)."""
+        masked = self._harvest_fn(Bp, p, cache_len)(caches)
+        bx = self._batch_axes(Bp, cache_len)
+        for i, r in enumerate(group):
+            k = self._prefix_key(r.prompt, p, cache_len)
+            self._prefix_store[k] = jax.tree.map(
+                lambda c, ax: jax.lax.slice_in_dim(c, i, i + 1, axis=ax),
+                masked, bx)
+            self._prefix_store.move_to_end(k)
+        while len(self._prefix_store) > self.prefix_store_max:
+            self._prefix_store.popitem(last=False)  # LRU eviction
 
     def _prefill_group(self, group: List[Request], cache_len: int):
         """Single-pass prefill for same-length requests.
@@ -285,6 +486,13 @@ class ServeEngine:
         ring = self._attn_ring_len(cache_len)
         temp = jnp.float32(self.temperature)
         idx, tok, caches = 0, None, None
+        harvest_p = 0
+        if self._prefix_enabled():
+            p, seeded = self._try_seed_prefix(group, Bp, cache_len)
+            if seeded is not None:
+                caches, idx = seeded, p
+            else:
+                harvest_p = p
         while idx < S:
             blk = min(_pow2_at_most(S - idx), self.max_prefill_block)
             if ring is not None:
@@ -294,10 +502,11 @@ class ServeEngine:
                 # queries (the sequential semantics evict ONE position per
                 # token), so the wrapped tail decays to single-token steps.
                 blk = min(blk, _pow2_at_most(ring - idx)) if idx < ring else 1
-            fn = self._prefill_fn(Bp, blk, idx == 0, cache_len)
+            first = caches is None
+            fn = self._prefill_fn(Bp, blk, first, cache_len)
             self.key, k1 = jax.random.split(self.key)
             tb = jnp.asarray(toks[:, idx: idx + blk])
-            if idx == 0:
+            if first:
                 if cfg.family == "audio":
                     tok, caches = fn(self.params, tb, k1, temp, emb)
                 else:
@@ -305,12 +514,15 @@ class ServeEngine:
             else:
                 tok, caches = fn(self.params, caches, tb, jnp.int32(idx), k1, temp)
             idx += blk
+        if harvest_p:
+            self._harvest_prefixes(group, Bp, harvest_p, cache_len, caches)
         return tok, caches
 
     # -- scheduling ---------------------------------------------------------
 
     def _required_cache_len(self, r: Request) -> int:
-        return _pow2_at_least(r.prompt.shape[0] + r.max_new)
+        # +gamma: a speculative verify block may overshoot the last token
+        return _pow2_at_least(r.prompt.shape[0] + r.max_new + self.spec_gamma)
 
     def _active_any(self) -> bool:
         return any(s is not None for s in self._slots)
@@ -395,15 +607,56 @@ class ServeEngine:
                 if r.finished:
                     self._finish(r, now)
 
+    def _spec_block_run(self) -> None:
+        st = self._state
+        fn = self._spec_fn(self.max_batch, self._cache_len, self.decode_block,
+                           self.spec_gamma, self.spec_draft_layers)
+        caches, tok, pos, toks, n_emit = fn(
+            self.params, st["caches"], jnp.asarray(st["tok"]),
+            jnp.asarray(st["pos"]), jnp.asarray(st["active"]))
+        st["caches"] = caches
+        toks_np = np.asarray(toks)  # the ONE host sync for this block
+        n_np = np.asarray(n_emit)
+        st["tok"], st["pos"] = np.array(tok), np.array(pos)  # writable copies
+        now = time.perf_counter()
+        for b in range(toks_np.shape[0]):
+            for r in list(self._slots):
+                if r is None or r.finished:
+                    continue
+                n = int(n_np[b, r.slot])
+                self._spec_stats["drafted"] += self.spec_gamma
+                self._spec_stats["accepted"] += n - 1
+                for t in toks_np[b, r.slot, :n]:
+                    r.tokens.append(int(t))
+                    if r.finished:
+                        break
+                if r.finished:
+                    self._finish(r, now)
+
+    # -- public driving API --------------------------------------------------
+
+    def pending(self) -> int:
+        """Requests not yet finished: queued + occupying a decode slot."""
+        return len(self.waiting) + sum(1 for s in self._slots if s is not None)
+
+    def step(self) -> None:
+        """ONE scheduler tick: admit whatever fits, then run one decode
+        block. The load generator drives this directly so arrivals can be
+        interleaved with decoding at wall-clock trace times."""
+        self._admit()
+        if self._state is not None and self._active_any():
+            if self.spec_gamma:
+                self._spec_block_run()
+            else:
+                self._decode_block_run()
+
     def run(self) -> Dict:
         """Drain the queue; reports the requests finished during THIS run
         (``self.done`` keeps accumulating across runs for lookups)."""
         t_start = time.perf_counter()
         done_before = len(self.done)
-        while self.waiting or (self._state is not None and self._active_any()):
-            self._admit()
-            if self._state is not None and self._active_any():
-                self._decode_block_run()
+        while self.pending():
+            self.step()
         return self.report(time.perf_counter() - t_start, self.done[done_before:])
 
     def report(self, wall_s: float, requests: Optional[List[Request]] = None) -> Dict:
@@ -420,13 +673,25 @@ class ServeEngine:
                 "first_token_s": round(r.t_first - r.t_submit, 6),
                 "total_s": round(r.t_done - r.t_submit, 6),
             })
-        return {
+        out = {
             "requests": reqs,
             "wall_s": round(wall_s, 6),
             "generated_tokens": gen_total,
             "tokens_per_s": round(gen_total / max(wall_s, 1e-9), 1),
             "compiled_executors": self.compile_counts(),
         }
+        if self.spec_gamma:
+            d = self._spec_stats
+            out["speculative"] = {
+                "gamma": self.spec_gamma,
+                "draft_layers": self.spec_draft_layers,
+                "drafted": d["drafted"],
+                "accepted": d["accepted"],
+                "acceptance": round(d["accepted"] / max(d["drafted"], 1), 4),
+            }
+        if self.prefix_cache:
+            out["prefix_cache"] = dict(self._prefix_stats)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -448,8 +713,7 @@ def sequential_prefill(cfg: ModelConfig, params, prompts, cache_len: int,
     B, S = prompts.shape
     caches = T.init_decode_caches(cfg, B, cache_len, cache_dtype)
     if cfg.family == "audio":
-        enc = T.encode_audio(cfg, params, jnp.asarray(extra_embeds))
-        caches["enc_out"] = enc.astype(caches["enc_out"].dtype)
+        caches = T.seed_audio_caches(cfg, params, caches, jnp.asarray(extra_embeds))
     step = step or sequential_step_fn(cfg)
     logits = None
     for i in range(S):

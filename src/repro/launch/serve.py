@@ -20,12 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import get_config
-from repro.launch.engine import (ServeEngine, sequential_decode,
-                                 sequential_prefill, sequential_step_fn)
+from repro.launch.engine import (CACHE_DTYPES, ServeEngine, parse_cache_dtype,
+                                 sequential_decode, sequential_prefill,
+                                 sequential_step_fn)
 from repro.models import layers as L
 from repro.models import transformer as T
-
-CACHE_DTYPES = {"bf16": jnp.bfloat16, "f32": jnp.float32}
 
 
 def build_inputs(cfg, batch: int, prompt_len: int, seed: int = 0):
@@ -51,13 +50,27 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--cache-dtype", choices=sorted(CACHE_DTYPES), default="bf16")
+    ap.add_argument("--cache-dtype", default="bf16",
+                    help=f"one of {sorted(CACHE_DTYPES)} (int8 = quantized caches)")
     ap.add_argument("--decode-block", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=0,
                     help="decode slots (0 = --batch)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="self-speculative draft length (0 = off; greedy only)")
+    ap.add_argument("--spec-draft-layers", type=int, default=0,
+                    help="truncated-depth draft layers (0 = num_layers // 2)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="seed caches from previously-seen pow2 prompt heads")
     ap.add_argument("--sequential", action="store_true",
                     help="run the reconstructed pre-PR token-by-token path")
     args = ap.parse_args(argv)
+
+    # validate EARLY with the supported-name list, not a jnp.dtype traceback
+    # from deep inside cache init
+    try:
+        cache_dtype = parse_cache_dtype(args.cache_dtype)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_config(args.arch, smoke=args.smoke)
     params, prompts, extra = build_inputs(cfg, args.batch, args.prompt_len, args.seed)
@@ -67,7 +80,7 @@ def main(argv=None):
         t0 = time.perf_counter()
         logits, caches = sequential_prefill(
             cfg, params, jnp.asarray(prompts), args.prompt_len + args.gen,
-            extra, CACHE_DTYPES[args.cache_dtype], step=step)
+            extra, cache_dtype, step=step)
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
         t0 = time.perf_counter()
@@ -89,9 +102,11 @@ def main(argv=None):
 
     engine = ServeEngine(
         cfg, params, max_batch=args.max_batch or args.batch,
-        cache_dtype=CACHE_DTYPES[args.cache_dtype],
+        cache_dtype=cache_dtype,
         decode_block=args.decode_block, temperature=args.temperature,
-        seed=args.seed,
+        seed=args.seed, spec_gamma=args.spec_gamma,
+        spec_draft_layers=args.spec_draft_layers or None,
+        prefix_cache=args.prefix_cache,
     )
     toks, rep = engine.generate(list(prompts), args.gen, extra_embeds=extra)
     prefill_s = max((r["prefill_s"] for r in rep["requests"]), default=0.0)
@@ -111,6 +126,9 @@ def main(argv=None):
         "compiled_executors": rep["compiled_executors"],
         "sample_output": toks[0][:8],
     }
+    for k in ("speculative", "prefix_cache"):
+        if k in rep:
+            report[k] = rep[k]
     print(json.dumps(report, indent=1))
     return report
 

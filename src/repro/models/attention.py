@@ -16,6 +16,7 @@ from repro.common.config import ModelConfig
 from repro.common.sharding import constrain, use_weight
 from repro.common.backend import default_interpret
 from repro.models import layers as L
+from repro.models.quant import dequantize_rows, is_int8, quantize_rows
 
 NEG_INF = -2.0e38
 
@@ -181,19 +182,43 @@ def _cache_write(cache, update, index):
     """Write ``update`` into ``cache`` at ``index`` along axis 1.
 
     A scalar index writes a contiguous [B, S, ...] span (multi-token prefill,
-    one ``dynamic_update_slice`` per leaf); an int32 [B] vector writes one
-    token per batch row at per-slot positions (continuous batching — freed
-    decode slots sit at different offsets). Out-of-range vector indices are
-    dropped, which lets the serving engine park inactive slots at
-    ``cache_len`` instead of masking.
+    one ``dynamic_update_slice`` per leaf); an int32 [B] vector writes S
+    tokens per batch row starting at per-slot positions (continuous batching
+    — freed decode slots sit at different offsets; S > 1 is the speculative
+    verify block). Out-of-range vector indices are dropped, which lets the
+    serving engine park inactive slots at ``cache_len`` instead of masking.
     """
     if jnp.ndim(index) == 1:
-        if update.shape[1] != 1:
-            raise ValueError("per-slot cache writes are single-token (S == 1)")
-        b = jnp.arange(cache.shape[0])
-        return cache.at[b, index].set(update[:, 0].astype(cache.dtype), mode="drop")
+        b = jnp.arange(cache.shape[0])[:, None]
+        cols = index[:, None] + jnp.arange(update.shape[1], dtype=index.dtype)
+        return cache.at[b, cols].set(update.astype(cache.dtype), mode="drop")
     start = (0, index) + (0,) * (cache.ndim - 2)
     return jax.lax.dynamic_update_slice(cache, update.astype(cache.dtype), start)
+
+
+def _write_kv_cache(kv_cache, k, v, positions, index):
+    """Write (k, v, positions) into the cache; return it plus read views.
+
+    A 3-tuple cache is full precision. A 5-tuple is the int8 layout
+    ``(k_codes, v_codes, k_scale, v_scale, pos)``: the update rows are
+    quantized per (batch, position, kv_head) row before the write, and the
+    read views are dequantized copies — the persistent cache stays int8 (the
+    memory win), the transient f32 view lives only inside the executor.
+    """
+    if len(kv_cache) == 5:
+        ck, cv, cks, cvs, cpos = kv_cache
+        kq, ksc = quantize_rows(k)
+        vq, vsc = quantize_rows(v)
+        ck, cks = _cache_write(ck, kq, index), _cache_write(cks, ksc, index)
+        cv, cvs = _cache_write(cv, vq, index), _cache_write(cvs, vsc, index)
+        cpos = _cache_write(cpos, positions, index)
+        new_cache = (ck, cv, cks, cvs, cpos)
+        return new_cache, dequantize_rows(ck, cks, k.dtype), dequantize_rows(cv, cvs, v.dtype), cpos
+    ck, cv, cpos = kv_cache
+    ck = _cache_write(ck, k, index)
+    cv = _cache_write(cv, v, index)
+    cpos = _cache_write(cpos, positions, index)
+    return (ck, cv, cpos), ck, cv, cpos
 
 
 def gqa_forward(
@@ -229,12 +254,7 @@ def gqa_forward(
     scale = hd ** -0.5
 
     if kv_cache is not None:
-        ck, cv, cpos = kv_cache
-        idx = cache_index
-        ck = _cache_write(ck, k, idx)
-        cv = _cache_write(cv, v, idx)
-        cpos = _cache_write(cpos, positions, idx)
-        new_cache = (ck, cv, cpos)
+        new_cache, ck, cv, cpos = _write_kv_cache(kv_cache, k, v, positions, cache_index)
         Sq, Sk = k.shape[1], ck.shape[1]
         if fresh_cache:
             # single-pass prefill into an empty cache: nothing precedes this
@@ -326,12 +346,23 @@ def mla_forward(
         # Never expand the latent cache to per-head K/V: fold wkv_b's K-half
         # into the query and its V-half into the attention output, so the
         # per-step cost is O(B·H·S·r) instead of O(B·S·r·H·(d_n+d_v)).
-        c_lat, c_rope, cpos = kv_cache
         idx = cache_index
-        c_lat = _cache_write(c_lat, latent, idx)
-        c_rope = _cache_write(c_rope, k_rope, idx)
-        cpos = _cache_write(cpos, positions, idx)
-        new_cache = (c_lat, c_rope, cpos)
+        if len(kv_cache) == 5:
+            c_lat, c_rope, c_lat_s, c_rope_s, cpos = kv_cache
+            lq, lsc = quantize_rows(latent)
+            rq, rsc = quantize_rows(k_rope)
+            c_lat, c_lat_s = _cache_write(c_lat, lq, idx), _cache_write(c_lat_s, lsc, idx)
+            c_rope, c_rope_s = _cache_write(c_rope, rq, idx), _cache_write(c_rope_s, rsc, idx)
+            cpos = _cache_write(cpos, positions, idx)
+            new_cache = (c_lat, c_rope, c_lat_s, c_rope_s, cpos)
+            c_lat = dequantize_rows(c_lat, c_lat_s, latent.dtype)
+            c_rope = dequantize_rows(c_rope, c_rope_s, k_rope.dtype)
+        else:
+            c_lat, c_rope, cpos = kv_cache
+            c_lat = _cache_write(c_lat, latent, idx)
+            c_rope = _cache_write(c_rope, k_rope, idx)
+            cpos = _cache_write(cpos, positions, idx)
+            new_cache = (c_lat, c_rope, cpos)
 
         wk_abs = wkv_b[..., :nope]  # [r, H, nope]
         wv_abs = wkv_b[..., nope:]  # [r, H, vd]
@@ -379,25 +410,37 @@ def attention_forward(params, x, positions, cfg: ModelConfig, **kw):
 
 
 def make_kv_cache_specs(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
-    """Per-layer cache ShapeDtypeStructs + logical axes for one layer."""
+    """Per-layer cache ShapeDtypeStructs + logical axes for one layer.
+
+    int8 caches carry two extra leaves per tuple — f32 per-row scales for the
+    K and V codes — laid out ``(k, v, k_scale, v_scale, pos)`` so the int32
+    position track stays the last leaf in both layouts.
+    """
+    quant = is_int8(dtype)
     if cfg.attention == "mla":
         kvr, rope_d = cfg.kv_lora_rank, cfg.qk_rope_head_dim
-        shapes = (
+        shapes = [
             jax.ShapeDtypeStruct((batch, cache_len, kvr), dtype),
             jax.ShapeDtypeStruct((batch, cache_len, rope_d), dtype),
-            jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
-        )
-        axes = (("batch", "cache_seq", None), ("batch", "cache_seq", None), ("batch", "cache_seq"))
+        ]
+        axes = [("batch", "cache_seq", None), ("batch", "cache_seq", None)]
+        if quant:
+            shapes += [jax.ShapeDtypeStruct((batch, cache_len), jnp.float32)] * 2
+            axes += [("batch", "cache_seq")] * 2
     else:
         hd = cfg.resolved_head_dim
-        shapes = (
+        shapes = [
             jax.ShapeDtypeStruct((batch, cache_len, cfg.num_kv_heads, hd), dtype),
             jax.ShapeDtypeStruct((batch, cache_len, cfg.num_kv_heads, hd), dtype),
-            jax.ShapeDtypeStruct((batch, cache_len), jnp.int32),
-        )
-        axes = (
+        ]
+        axes = [
             ("batch", "cache_seq", "kv_heads", None),
             ("batch", "cache_seq", "kv_heads", None),
-            ("batch", "cache_seq"),
-        )
-    return shapes, axes
+        ]
+        if quant:
+            shapes += [jax.ShapeDtypeStruct(
+                (batch, cache_len, cfg.num_kv_heads), jnp.float32)] * 2
+            axes += [("batch", "cache_seq", "kv_heads")] * 2
+    shapes.append(jax.ShapeDtypeStruct((batch, cache_len), jnp.int32))
+    axes.append(("batch", "cache_seq"))
+    return tuple(shapes), tuple(axes)

@@ -1,0 +1,41 @@
+"""Int8 row-quantization for decode caches (KV, MLA latent, SSM state).
+
+Serving caches are write-once/read-many (attention KV, cross-attention KV)
+or read-modify-write (SSM state), and their rows are small (head_dim, latent
+rank, or state width). Symmetric per-row int8 — one f32 scale per cache row,
+codes = round(x / scale) with scale = amax(|row|) / 127 — halves cache bytes
+vs bf16 (quarter vs f32) at a bounded logit drift, which is what lets
+``ServeEngine``'s ``max_batch`` grow on a fixed memory budget.
+
+The quantized representation is plain extra pytree leaves (codes int8 +
+scales f32) so it donates, scatters, and shards exactly like the full-
+precision caches: ``_cache_write`` works unchanged on both leaves because a
+scale row is just a cache row with zero trailing dims.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127.0
+# floor on the per-row scale: rows of exact zeros (virgin cache) quantize to
+# zero codes / zero scale and dequantize back to exact zeros
+SCALE_EPS = 1e-30
+
+
+def is_int8(x) -> bool:
+    """True for int8 dtypes and arrays (cache-leaf dispatch)."""
+    return jnp.dtype(getattr(x, "dtype", x)) == jnp.int8
+
+
+def quantize_rows(x):
+    """[..., D] -> (codes int8 [..., D], scale f32 [...]) per-row symmetric."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / QMAX
+    codes = jnp.round(xf / jnp.maximum(scale, SCALE_EPS)[..., None])
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize_rows(codes, scale, dtype=jnp.float32):
+    """(codes int8 [..., D], scale f32 [...]) -> values [..., D]."""
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)

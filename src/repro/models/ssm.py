@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.common.config import ModelConfig
 from repro.common.sharding import constrain, use_weight
 from repro.models import layers as L
+from repro.models.quant import dequantize_rows, is_int8, quantize_rows
 
 CHUNK = 256
 
@@ -60,24 +61,53 @@ def mamba_specs(cfg: ModelConfig) -> Dict[str, L.Spec]:
 
 
 def mamba_state_specs(cfg: ModelConfig, batch: int, dtype=jnp.float32):
-    """Decode-time carried state (per layer): (conv_buffer, ssm_state)."""
+    """Decode-time carried state (per layer): (conv_buffer, ssm_state).
+
+    int8 appends per-row f32 scales — ``(conv, h, conv_scale, h_scale)`` —
+    quantized on every state write and dequantized on read (the recurrence
+    itself always runs in f32).
+    """
     d_in = cfg.ssm_expand * cfg.d_model
     N = cfg.ssm_state
     conv = cfg.ssm_conv
     if cfg.ssm_version == 1:
-        shapes = (
+        shapes = [
             jax.ShapeDtypeStruct((batch, conv - 1, d_in), dtype),
             jax.ShapeDtypeStruct((batch, d_in, N), dtype),
-        )
-        axes = (("batch", None, "ssm_inner"), ("batch", "ssm_inner", "ssm_state"))
+        ]
+        axes = [("batch", None, "ssm_inner"), ("batch", "ssm_inner", "ssm_state")]
+        scale_shapes = [(batch, conv - 1), (batch, d_in)]
+        scale_axes = [("batch", None), ("batch", "ssm_inner")]
     else:
         H = d_in // cfg.ssm_headdim
-        shapes = (
+        shapes = [
             jax.ShapeDtypeStruct((batch, conv - 1, d_in + 2 * N), dtype),
             jax.ShapeDtypeStruct((batch, H, cfg.ssm_headdim, N), dtype),
-        )
-        axes = (("batch", None, "ssm_inner"), ("batch", None, None, "ssm_state"))
-    return shapes, axes
+        ]
+        axes = [("batch", None, "ssm_inner"), ("batch", None, None, "ssm_state")]
+        scale_shapes = [(batch, conv - 1), (batch, H, cfg.ssm_headdim)]
+        scale_axes = [("batch", None), ("batch", None, None)]
+    if is_int8(dtype):
+        shapes += [jax.ShapeDtypeStruct(s, jnp.float32) for s in scale_shapes]
+        axes += scale_axes
+    return tuple(shapes), tuple(axes)
+
+
+def _state_unpack(state):
+    """(conv, h) read views — dequantized f32 when the state is int8."""
+    if len(state) == 4:
+        conv, h, conv_s, h_s = state
+        return dequantize_rows(conv, conv_s), dequantize_rows(h, h_s)
+    return state[0], state[1]
+
+
+def _state_pack(template, conv, h):
+    """Re-pack (conv, h) in the layout of ``template`` (quantizing for int8)."""
+    if len(template) == 4:
+        cq, cs = quantize_rows(conv)
+        hq, hs = quantize_rows(h)
+        return (cq, hq, cs, hs)
+    return (conv, h)
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +212,7 @@ def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     w_in = use_weight(params["w_in"], ("embed", "ssm_inner"))
     proj = jnp.einsum("btd,dk->btk", x, w_in.astype(x.dtype))
     xz, z = proj[..., :d_in], proj[..., d_in:]
-    conv_state = state[0] if state is not None else None
+    conv_state, h_read = _state_unpack(state) if state is not None else (None, None)
     xc, new_conv = _causal_conv(xz, params["conv_w"], params["conv_b"], conv_state)
     xc = jax.nn.silu(xc)
     xc = constrain(xc, ("batch", "seq", "ssm_inner"))
@@ -194,7 +224,7 @@ def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
         + params["dt_bias"].astype(x.dtype)
     ).astype(jnp.float32)  # [B, T, d_in]
     A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [d_in, N]
-    h0 = state[1].astype(jnp.float32) if state is not None else jnp.zeros((B, d_in, N), jnp.float32)
+    h0 = h_read.astype(jnp.float32) if state is not None else jnp.zeros((B, d_in, N), jnp.float32)
 
     # chunked scan with a/bx construction fused INSIDE the chunk: the state
     # history [B, T, d_in, N] never exists — only [B, K, d_in, N] does. K
@@ -222,7 +252,7 @@ def mamba1_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     w_out = use_weight(params["w_out"], ("ssm_inner", "embed"))
     out = jnp.einsum("btc,cd->btd", y, w_out.astype(x.dtype))
     out = constrain(out, ("batch", "seq", "embed"))
-    new_state = (new_conv, h_final) if state is not None else None
+    new_state = _state_pack(state, new_conv, h_final) if state is not None else None
     return out, new_state
 
 
@@ -243,7 +273,7 @@ def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     z = proj[..., :d_in]
     xBC = proj[..., d_in : 2 * d_in + 2 * N]
     dt_in = proj[..., 2 * d_in + 2 * N :]  # [B, T, H]
-    conv_state = state[0] if state is not None else None
+    conv_state, h_read = _state_unpack(state) if state is not None else (None, None)
     xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_state)
     xBC = jax.nn.silu(xBC)
     xs = xBC[..., :d_in].reshape(B, T, H, P)
@@ -253,7 +283,7 @@ def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # [B,T,H]
     A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H]
     h0 = (
-        state[1].astype(jnp.float32)
+        h_read.astype(jnp.float32)
         if state is not None
         else jnp.zeros((B, H, P, N), jnp.float32)
     )
@@ -284,7 +314,7 @@ def mamba2_forward(params, x, cfg: ModelConfig, state: Optional[Tuple] = None):
     w_out = use_weight(params["w_out"], ("ssm_inner", "embed"))
     out = jnp.einsum("btc,cd->btd", y, w_out.astype(x.dtype))
     out = constrain(out, ("batch", "seq", "embed"))
-    new_state = (new_conv, h_final) if state is not None else None
+    new_state = _state_pack(state, new_conv, h_final) if state is not None else None
     return out, new_state
 
 

@@ -22,6 +22,7 @@ from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models.mlp import mlp_forward, mlp_specs
 from repro.models.moe import moe_forward, moe_specs
+from repro.models.quant import dequantize_rows, is_int8, quantize_rows
 
 
 # ---------------------------------------------------------------------------
@@ -331,8 +332,10 @@ def encode_audio(cfg, params, enc_embeds, remat=False):
     """whisper encoder over stubbed frame embeddings -> [B, Se, D].
 
     The ONE encoder entry point: the training forward (``audio_forward``) and
-    the serving engine's prefill both run it; encoder output is computed once
-    per request and carried in the decode caches as ``enc_out``.
+    the serving engine's prefill both run it. For serving, the encoder output
+    is immediately projected to per-layer cross-attention K/V
+    (``seed_audio_caches``) and carried in the decode caches as ``cross`` —
+    decode never re-touches the encoder output itself.
     """
     B, Se = enc_embeds.shape[0], enc_embeds.shape[1]
     enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
@@ -390,6 +393,51 @@ def cross_attention(params, xq, xkv, q_pos, k_pos, cfg):
     bias = jnp.zeros((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), jnp.float32)
     out = A._sdpa(q, k, v, bias, hd ** -0.5)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(xq.dtype))
+
+
+def cross_attention_cached(params, xq, k, v, cfg):
+    """Cross-attention against PRE-PROJECTED encoder K/V ([B, Se, KH, hd]).
+
+    The decode-path twin of ``cross_attention``: only the query projection
+    runs per step — the K/V einsums that used to dominate whisper decode
+    (satellite bugfix: the 1.2× decode ratio) happen once at prefill.
+    """
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"].astype(xq.dtype))
+    bias = jnp.zeros((xq.shape[0], xq.shape[1], k.shape[1]), jnp.float32)
+    out = A._sdpa(q, k.astype(xq.dtype), v.astype(xq.dtype), bias, hd ** -0.5)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(xq.dtype))
+
+
+def audio_cross_kv(cfg, params, enc):
+    """Project encoder output to stacked per-layer cross K/V.
+
+    enc [B, Se, D] -> (k, v) each [L, B, Se, KH, hd]: one einsum over the
+    layer-stacked weights instead of L per-step projections.
+    """
+    wk = params["cross_layers"]["attn"]["wk"]
+    wv = params["cross_layers"]["attn"]["wv"]
+    k = jnp.einsum("bsd,ldhk->lbshk", enc, wk.astype(enc.dtype))
+    v = jnp.einsum("bsd,ldhk->lbshk", enc, wv.astype(enc.dtype))
+    return k, v
+
+
+def seed_audio_caches(cfg, params, caches, enc_embeds):
+    """Run the encoder and fill the read-only ``cross`` K/V cache leaves.
+
+    Serving prefill entry point: quantizes per row when the cache layout is
+    int8 (4 leaves), otherwise casts to the cache dtype.
+    """
+    enc = encode_audio(cfg, params, enc_embeds)
+    k, v = audio_cross_kv(cfg, params, enc)
+    cross = caches["cross"]
+    if len(cross) == 4:
+        kq, ks = quantize_rows(k)
+        vq, vs = quantize_rows(v)
+        new_cross = (kq, vq, ks, vs)
+    else:
+        new_cross = (k.astype(cross[0].dtype), v.astype(cross[1].dtype))
+    return {**caches, "cross": new_cross}
 
 
 def logits_from_hidden(cfg: ModelConfig, params, hidden):
@@ -464,7 +512,15 @@ def lm_loss(cfg: ModelConfig, params, batch, remat=True, aux_weight=0.01, force_
 
 
 def make_decode_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
-    """ShapeDtypeStructs for stacked per-layer caches + logical axes trees."""
+    """ShapeDtypeStructs for stacked per-layer caches + logical axes trees.
+
+    ``dtype=int8`` selects the quantized cache layouts (extra f32 scale
+    leaves; see models/quant.py). SSM states stay f32 for every non-int8
+    dtype — the recurrence is precision-sensitive — but adopt the quantized
+    layout under int8 so the whole cache tree shrinks together.
+    """
+    # SSM recurrences carry f32 state unless explicitly quantized to int8
+    sdtype = dtype if is_int8(dtype) else jnp.float32
     if cfg.family in ("dense", "vlm", "moe"):
         shapes, axes = A.make_kv_cache_specs(cfg, batch, cache_len, dtype)
         Lx = cfg.num_layers
@@ -472,13 +528,13 @@ def make_decode_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.b
         st_axes = tuple(("stack",) + a for a in axes)
         return {"kv": stacked}, {"kv": st_axes}
     if cfg.family == "ssm":
-        shapes, axes = S.mamba_state_specs(cfg, batch)
+        shapes, axes = S.mamba_state_specs(cfg, batch, sdtype)
         Lx = cfg.num_layers
         stacked = tuple(jax.ShapeDtypeStruct((Lx,) + s.shape, s.dtype) for s in shapes)
         st_axes = tuple(("stack",) + a for a in axes)
         return {"ssm": stacked}, {"ssm": st_axes}
     if cfg.family == "hybrid":
-        sshapes, saxes = S.mamba_state_specs(cfg, batch)
+        sshapes, saxes = S.mamba_state_specs(cfg, batch, sdtype)
         Lx = cfg.num_layers
         ssm_stacked = tuple(jax.ShapeDtypeStruct((Lx,) + s.shape, s.dtype) for s in sshapes)
         ssm_axes = tuple(("stack",) + a for a in saxes)
@@ -495,10 +551,18 @@ def make_decode_caches(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.b
         Lx = cfg.num_layers
         self_kv = tuple(jax.ShapeDtypeStruct((Lx,) + s.shape, s.dtype) for s in kshapes)
         self_axes = tuple(("stack",) + a for a in kaxes)
-        enc = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dtype)
+        # cross-attention K/V, projected ONCE from the encoder output at
+        # prefill (seed_audio_caches) and read-only during decode — replaces
+        # the old raw ``enc_out`` leaf that forced a re-projection per step
+        KH, hd, Se = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.encoder_seq
+        cshapes = [jax.ShapeDtypeStruct((Lx, batch, Se, KH, hd), dtype)] * 2
+        caxes = [("stack", "batch", None, "kv_heads", None)] * 2
+        if is_int8(dtype):
+            cshapes += [jax.ShapeDtypeStruct((Lx, batch, Se, KH), jnp.float32)] * 2
+            caxes += [("stack", "batch", None, "kv_heads")] * 2
         return (
-            {"kv": self_kv, "enc_out": enc},
-            {"kv": self_axes, "enc_out": ("batch", None, "embed")},
+            {"kv": self_kv, "cross": tuple(cshapes)},
+            {"kv": self_axes, "cross": tuple(caxes)},
         )
     raise ValueError(cfg.family)
 
@@ -524,10 +588,12 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=Fa
     a scalar cache write position — the S tokens land contiguously at
     [index, index + S) with ONE ``dynamic_update_slice`` per layer (batched
     single-pass prefill) — or an int32 [B] vector of per-slot positions
-    (S == 1; the serving engine's continuous batching, where freed slots sit
-    at different depths). ``fresh_cache`` (static) asserts nothing precedes
-    this write in the cache, routing long prefill blocks through the flash
-    attention path instead of cache-wide scores.
+    (the serving engine's continuous batching, where freed slots sit at
+    different depths; S > 1 with a vector index is the speculative verify
+    block — each row writes S tokens at [index[b], index[b] + S)).
+    ``fresh_cache`` (static) asserts nothing precedes this write in the
+    cache, routing long prefill blocks through the flash attention path
+    instead of cache-wide scores.
 
     Returns (logits [B, S, V], new_caches).
     """
@@ -535,9 +601,12 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=Fa
     x = L.embed(params["embed"], tokens)
     x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
     if jnp.ndim(index) == 1:
-        if S != 1:
-            raise ValueError("per-slot decode (vector index) is single-token")
-        positions = jnp.asarray(index, jnp.int32)[:, None]
+        if S != 1 and cfg.family == "hybrid":
+            # ring-buffer attention caches wrap write positions with a
+            # remainder; the vector multi-token write drops instead of
+            # wrapping, so spans crossing the ring edge would be lost
+            raise ValueError("hybrid ring caches take single-token vector writes only")
+        positions = jnp.asarray(index, jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     else:
         positions = jnp.broadcast_to(
             jnp.asarray(index, jnp.int32) + jnp.arange(S, dtype=jnp.int32), (B, S)
@@ -577,6 +646,71 @@ def decode_step(cfg: ModelConfig, params, tokens, caches, index, force_window=Fa
     return logits_from_hidden(cfg, params, x), new_caches
 
 
+def supports_self_speculation(cfg: ModelConfig) -> bool:
+    """Self-speculative decoding needs (a) a homogeneous stacked layer scan to
+    truncate and (b) caches that can be safely overwritten on rejection.
+    Attention caches qualify — a rejected slot is rewritten before it is ever
+    attended (writes precede reads and positions advance monotonically) — but
+    SSM/hybrid recurrent state cannot roll back, so those families are out.
+    """
+    return cfg.family in ("dense", "vlm", "moe")
+
+
+def draft_decode_step(cfg: ModelConfig, params, tokens, caches, index, draft_layers: int):
+    """Truncated-depth (early-exit self-speculative) draft pass.
+
+    Runs only the FIRST ``draft_layers`` of the stacked scan and reads draft
+    logits off the shared residual trunk (final_norm + lm head). tokens:
+    [B, 1]; ``index``: int32 [B] per-slot write positions. The draft's cache
+    writes for layers < draft_layers are identical to what the verify pass
+    will rewrite (same trunk, same inputs), so speculation never corrupts the
+    cache. Returns (logits [B, 1, V], new_caches) with the updated layer-head
+    caches spliced back into the full stack.
+    """
+    if not supports_self_speculation(cfg):
+        raise ValueError(f"self-speculation unsupported for family {cfg.family!r}")
+    if not (0 < draft_layers < cfg.num_layers):
+        raise ValueError(f"draft_layers must be in (0, {cfg.num_layers}), got {draft_layers}")
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.asarray(index, jnp.int32)[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    windows = layer_windows(cfg, cfg.num_layers)
+    kv = caches["kv"]
+    head_kv = jax.tree.map(lambda a: a[:draft_layers], kv)
+
+    if cfg.family in ("dense", "vlm"):
+        sub = jax.tree.map(lambda a: a[:draft_layers], params["layers"])
+        x, new_head = dense_stack_decode(sub, x, positions, cfg, windows[:draft_layers],
+                                         head_kv, index)
+    else:  # moe: dense head layers first, then truncated moe stack
+        nd = cfg.first_dense_layers
+        k1 = min(draft_layers, nd)
+        new_parts = []
+        if k1:
+            sub = jax.tree.map(lambda a: a[:k1], params["dense_layers"])
+            x, nh = dense_stack_decode(sub, x, positions, cfg, windows[:k1],
+                                       jax.tree.map(lambda a: a[:k1], head_kv), index)
+            new_parts.append(nh)
+        k2 = draft_layers - k1
+        if k2:
+            sub = jax.tree.map(lambda a: a[:k2], params["layers"])
+            x, nt = moe_stack_decode(sub, x, positions, cfg, windows[nd : nd + k2],
+                                     jax.tree.map(lambda a: a[k1:], head_kv), index)
+            new_parts.append(nt)
+        new_head = (
+            jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), *new_parts)
+            if len(new_parts) > 1 else new_parts[0]
+        )
+
+    new_kv = jax.tree.map(
+        lambda full, nh: jax.lax.dynamic_update_slice_in_dim(full, nh, 0, axis=0),
+        kv, new_head,
+    )
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return logits_from_hidden(cfg, params, x), {"kv": new_kv}
+
+
 def _hybrid_decode(cfg, params, x, positions, caches, index):
     period = cfg.hybrid_attn_every or cfg.num_layers
     n_sb = cfg.num_layers // period
@@ -614,12 +748,16 @@ def _shared_attn_decode(cfg, p, x, positions, cache, write_idx, window):
 
 
 def _audio_decode(cfg, params, x, positions, caches, index, fresh_cache=False):
-    enc = caches["enc_out"]
-    B, Se = enc.shape[0], enc.shape[1]
-    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    cross = caches["cross"]
+    quant = len(cross) == 4
 
     def body(xc, layer):
-        p_self, p_cross, cache = layer
+        p_self, p_cross, cache = layer[:3]
+        if quant:
+            ck = dequantize_rows(layer[3], layer[5], xc.dtype)
+            cv = dequantize_rows(layer[4], layer[6], xc.dtype)
+        else:
+            ck, cv = layer[3], layer[4]
         h = L.apply_norm(cfg.norm, p_self["norm1"], xc)
         a, new_cache = A.gqa_forward(p_self["attn"], h, positions, cfg, window=0,
                                      kv_cache=cache, cache_index=index, fresh_cache=fresh_cache)
@@ -627,11 +765,12 @@ def _audio_decode(cfg, params, x, positions, caches, index, fresh_cache=False):
         h = L.apply_norm(cfg.norm, p_self["norm2"], xc)
         xc = xc + mlp_forward(p_self["mlp"], h, cfg)
         h = L.apply_norm(cfg.norm, p_cross["norm1"], xc)
-        c = cross_attention(p_cross["attn"], h, enc.astype(xc.dtype), positions, enc_pos, cfg)
+        c = cross_attention_cached(p_cross["attn"], h, ck, cv, cfg)
         xc = xc + c
         h = L.apply_norm(cfg.norm, p_cross["norm2"], xc)
         xc = xc + mlp_forward(p_cross["mlp"], h, cfg)
         return xc, new_cache
 
-    x, new_kv = jax.lax.scan(body, x, (params["layers"], params["cross_layers"], caches["kv"]))
-    return x, {"kv": new_kv, "enc_out": enc}
+    xs = (params["layers"], params["cross_layers"], caches["kv"]) + tuple(cross)
+    x, new_kv = jax.lax.scan(body, x, xs)
+    return x, {"kv": new_kv, "cross": cross}

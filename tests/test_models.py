@@ -60,7 +60,8 @@ def test_decode_step_shapes(name):
     B, cache_len = 2, 32
     caches = T.init_decode_caches(cfg, B, cache_len, jnp.float32)
     if cfg.family == "audio":
-        caches["enc_out"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        enc = jnp.ones((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        caches = T.seed_audio_caches(cfg, params, caches, enc)
     logits, new_caches = T.decode_step(cfg, params, jnp.ones((B, 1), jnp.int32),
                                        caches, jnp.int32(3))
     assert logits.shape == (B, 1, cfg.vocab_size)

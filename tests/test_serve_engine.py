@@ -38,7 +38,7 @@ def _caches_with_enc(cfg, params, B, cache_len, rng):
     enc_embeds = None
     if cfg.family == "audio":
         enc_embeds = jnp.asarray(rng.randn(B, cfg.encoder_seq, cfg.d_model), jnp.float32)
-        caches["enc_out"] = T.encode_audio(cfg, params, enc_embeds).astype(jnp.float32)
+        caches = T.seed_audio_caches(cfg, params, caches, enc_embeds)
     return caches, enc_embeds
 
 
