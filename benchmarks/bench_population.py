@@ -1,0 +1,197 @@
+"""Sync vs semi-async vs adaptive population federation — time-to-target.
+
+ROADMAP item 1's headline claim: on the SAME seeded device trace (availability
+windows + lognormal straggler tails over the non-IID split), closing rounds at
+a deadline quantile with staleness-damped late updates (semi-async), and
+additionally letting the §VI controller plan against the wall-clock model
+(adaptive + ``time_budget``), should reach a fixed-(P, Q) synchronous
+baseline's loss in LESS simulated wall-clock. This benchmark runs all three
+and records the comparison into BENCH_population.json:
+
+  * sync       — every round waits for the slowest sampled cohort;
+  * semi_async — rounds close at ``--deadline-quantile``; late groups'
+                 updates land next round damped by ``damping**staleness``;
+  * adaptive   — semi-async scheduling + ControllerCore re-picking
+                 (P, Q, η, compression rung) each round against byte AND
+                 wall-clock ledgers (budget = ``--time-budget-frac`` × the
+                 sync run's total simulated seconds).
+
+  PYTHONPATH=src python benchmarks/bench_population.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import csv_row, setup_experiment
+
+from repro.core.controller import AdaptiveConfig
+from repro.core.metrics import smoothed_losses, steps_to_target
+from repro.core.population import (
+    PopulationConfig,
+    run_population,
+    run_population_adaptive,
+)
+
+
+def time_to_target(res, target, smooth):
+    """(simulated seconds to reach target, step index) — (None, None) if missed."""
+    hit = steps_to_target(res["losses"], target, smooth)
+    if hit is None:
+        return None, None
+    return float(res["times"][hit]), int(hit)
+
+
+def summarize(res, target, smooth):
+    tt, hit = time_to_target(res, target, smooth)
+    return {
+        "final_loss": float(smoothed_losses(res["losses"], smooth)[-1]),
+        "sim_seconds": float(res["sim_seconds"]),
+        "steps": int(len(res["losses"])),
+        "time_to_target": tt,
+        "steps_to_target": hit,
+        "staleness_hist": {str(k): v for k, v in sorted(res["staleness_hist"].items())},
+        "cohort_buckets": sorted({h["bucket"] for h in res["history"]
+                                  if "bucket" in h}),
+        "executors_compiled": len(res["runner"]._round_cache),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="mimic3")
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--p", type=int, default=2)
+    ap.add_argument("--q", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--samples", type=int, default=512)
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=32)
+    ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--pop-devices", type=int, default=64,
+                    help="simulated population per group")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="devices sampled per group per round")
+    ap.add_argument("--deadline-quantile", type=float, default=0.8)
+    ap.add_argument("--staleness-damping", type=float, default=0.6)
+    ap.add_argument("--max-staleness", type=int, default=4)
+    ap.add_argument("--t-compute", type=float, default=0.05)
+    ap.add_argument("--time-budget-frac", type=float, default=0.75,
+                    help="adaptive wall-clock budget as a fraction of sync's")
+    ap.add_argument("--adaptive-steps-frac", type=float, default=1.0,
+                    help="adaptive step CEILING as a fraction of --steps; the "
+                    "binding constraint is the wall-clock budget (the "
+                    "controller trades cheap compressed steps for time)")
+    ap.add_argument("--max-interval", type=int, default=16)
+    ap.add_argument("--target-frac", type=float, default=0.75,
+                    help="target = sync's smoothed loss this far into its run")
+    ap.add_argument("--smooth", type=int, default=4)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..",
+                                                  "BENCH_population.json"))
+    args = ap.parse_args(argv)
+
+    exp = setup_experiment(dataset=args.dataset, n=args.samples,
+                           groups=args.groups, devices=args.devices,
+                           alpha=0.25, q=args.q, p=args.p, lr=args.lr)
+    model, fed, train = exp["model"], exp["fed"], exp["train"]
+    pop = PopulationConfig(seed=args.trace_seed,
+                           devices_per_group=args.pop_devices,
+                           target_cohort=args.cohort,
+                           deadline_quantile=args.deadline_quantile,
+                           staleness_damping=args.staleness_damping,
+                           max_staleness=args.max_staleness)
+    steps = max(1, args.steps // args.p) * args.p
+    rounds = steps // args.p
+    print(f"# sync vs semi-async vs adaptive population, {args.dataset}, "
+          f"{rounds} rounds x P={args.p} (trace seed {args.trace_seed}, "
+          f"{args.pop_devices} devices/group, cohort {args.cohort})")
+
+    kw = dict(t_compute=args.t_compute)
+    res_sync = run_population(model, fed, train, exp["data"], pop,
+                              rounds=rounds, mode="sync", **kw)
+    res_semi = run_population(model, fed, train, exp["data"], pop,
+                              rounds=rounds, mode="semi_async", **kw)
+    cfg = AdaptiveConfig(total_steps=int(steps * args.adaptive_steps_frac),
+                         time_budget=float(res_sync["sim_seconds"])
+                         * args.time_budget_frac,
+                         max_interval=args.max_interval,
+                         eta_max=max(train.learning_rate * 10, 0.05),
+                         init_probe=False)
+    res_ad = run_population_adaptive(model, fed, train, exp["data"], pop, cfg,
+                                     **kw)
+
+    # target: the loss sync has reached target_frac of the way through its
+    # run — every mode gets the full step budget to reach the same bar
+    sm_sync = smoothed_losses(res_sync["losses"], args.smooth)
+    target = float(sm_sync[min(len(sm_sync) - 1,
+                               int(args.target_frac * len(sm_sync)))])
+    modes = {
+        "sync": summarize(res_sync, target, args.smooth),
+        "semi_async": summarize(res_semi, target, args.smooth),
+        "adaptive": summarize(res_ad, target, args.smooth),
+    }
+    tt = {m: modes[m]["time_to_target"] for m in modes}
+    summary = {
+        "target_loss": target,
+        "trace_seed": args.trace_seed,
+        "semi_async_faster_than_sync": (
+            tt["semi_async"] is not None
+            and (tt["sync"] is None or tt["semi_async"] < tt["sync"])),
+        "adaptive_faster_than_sync": (
+            tt["adaptive"] is not None
+            and (tt["sync"] is None or tt["adaptive"] < tt["sync"])),
+        "adaptive_time_budget": cfg.time_budget,
+    }
+
+    csv_row("mode", "final_loss", "sim_s", "time_to_target_s", "executors")
+    for m in ("sync", "semi_async", "adaptive"):
+        r = modes[m]
+        csv_row(m, round(r["final_loss"], 4), round(r["sim_seconds"], 2),
+                None if r["time_to_target"] is None
+                else round(r["time_to_target"], 2),
+                r["executors_compiled"])
+    for h in res_ad["history"]:
+        print(f"#   round {h['round']:3d}: P=Q={h['P']:3d} eta={h['eta']:.4g} "
+              f"rung={h['rung']} sim={h['seconds_total']:.2f}s "
+              f"loss={h['loss_last']:.4f}")
+
+    result = {
+        "config": {"dataset": args.dataset, "steps": steps, "p": args.p,
+                   "q": args.q, "lr": args.lr, "samples": args.samples,
+                   "groups": args.groups, "devices": args.devices,
+                   "trace_seed": args.trace_seed,
+                   "pop_devices": args.pop_devices, "cohort": args.cohort,
+                   "deadline_quantile": args.deadline_quantile,
+                   "staleness_damping": args.staleness_damping,
+                   "max_staleness": args.max_staleness,
+                   "t_compute": args.t_compute,
+                   "time_budget_frac": args.time_budget_frac,
+                   "adaptive_steps_frac": args.adaptive_steps_frac,
+                   "max_interval": args.max_interval,
+                   "target_frac": args.target_frac, "smooth": args.smooth},
+        "summary": summary,
+        "modes": modes,
+        "curves": {
+            "sync": {"losses": res_sync["losses"].tolist(),
+                     "times": res_sync["times"].tolist()},
+            "semi_async": {"losses": res_semi["losses"].tolist(),
+                           "times": res_semi["times"].tolist()},
+            "adaptive": {"losses": res_ad["losses"].tolist(),
+                         "times": res_ad["times"].tolist(),
+                         "history": res_ad["history"]},
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"# wrote {os.path.abspath(args.out)}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -3,17 +3,79 @@
 Multi-host note: in a real pod deployment each host saves its addressable
 shards under a per-host suffix; here (single-host container) we gather to
 host numpy. The format is stable across restarts and tested round-trip.
+
+Container structure survives the trip: tuples/lists are flattened to
+``__seq{i}`` keys for the .npz (stable, order-preserving), and the manifest
+records a structure descriptor from which ``load_checkpoint`` rebuilds the
+original python containers — dict vs list vs tuple vs namedtuple — exactly.
+NamedTuple state classes (``HSGDState``, optimizer states, ...) register via
+``register_state_class`` so a restore returns the real class, not an
+anonymous lookalike; unregistered names degrade to a dynamically created
+namedtuple with the recorded fields. Manifests written before the descriptor
+existed load the old way (nested dicts with ``__seq{i}`` keys).
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+from collections import namedtuple
+from typing import Any, Dict, Tuple, Type
 
 import jax
 import numpy as np
 
 from repro.common.pytree import flatten_dict, unflatten_dict
+
+# name -> class for namedtuple restoration (populated by the state owners,
+# e.g. core/hsgd.py registers HSGDState at import time)
+_STATE_CLASSES: Dict[str, Type] = {}
+
+
+def register_state_class(cls: Type) -> Type:
+    """Register a NamedTuple class for checkpoint restoration (idempotent;
+    usable as a decorator)."""
+    _STATE_CLASSES[cls.__name__] = cls
+    return cls
+
+
+def _is_namedtuple(x) -> bool:
+    return isinstance(x, tuple) and hasattr(x, "_fields")
+
+
+def _structure_of(tree) -> Dict[str, Any]:
+    """JSON-able descriptor of the container skeleton (leaves are opaque)."""
+    if isinstance(tree, dict):
+        keys = list(tree.keys())
+        return {"kind": "dict", "keys": keys,
+                "children": [_structure_of(tree[k]) for k in keys]}
+    if _is_namedtuple(tree):
+        return {"kind": "namedtuple", "class": type(tree).__name__,
+                "fields": list(tree._fields),
+                "children": [_structure_of(v) for v in tree]}
+    if isinstance(tree, (list, tuple)):
+        return {"kind": type(tree).__name__,
+                "children": [_structure_of(v) for v in tree]}
+    return {"kind": "leaf"}
+
+
+def _rebuild(nested, desc):
+    """Reapply a structure descriptor to ``unflatten_dict``'s nested dicts."""
+    kind = desc["kind"]
+    if kind == "leaf":
+        return nested
+    if kind == "dict":
+        return {k: _rebuild(nested[str(k)], d)
+                for k, d in zip(desc["keys"], desc["children"])}
+    items = [_rebuild(nested[f"__seq{i}"], d)
+             for i, d in enumerate(desc["children"])]
+    if kind == "list":
+        return items
+    if kind == "tuple":
+        return tuple(items)
+    cls = _STATE_CLASSES.get(desc["class"])
+    if cls is None:  # unregistered: a faithful stand-in with the same fields
+        cls = namedtuple(desc["class"], desc["fields"])
+    return cls(*items)
 
 
 def save_checkpoint(path: str, params: Any, step: int = 0, extra: Dict | None = None):
@@ -27,6 +89,7 @@ def save_checkpoint(path: str, params: Any, step: int = 0, extra: Dict | None = 
         "extra": extra or {},
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "structure": _structure_of(params),
     }
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -38,6 +101,8 @@ def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
     with np.load(os.path.join(path, "arrays.npz")) as z:
         flat = {k: z[k] for k in manifest["keys"]}
     params = unflatten_dict(flat)
+    if "structure" in manifest:  # pre-descriptor checkpoints stay dicts
+        params = _rebuild(params, manifest["structure"])
     return params, manifest["step"], manifest.get("extra", {})
 
 

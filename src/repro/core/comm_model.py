@@ -104,7 +104,31 @@ def round_time(
     """§VII-A3: t = t_g + (P/Q)(t_l + t_e) + P · t_c for one global round.
 
     Devices transmit in parallel (time = one device's payload / link speed);
-    hospital/cloud payloads aggregate the group's models.
+    hospital/cloud payloads aggregate the group's models. Symmetric fleet:
+    every device sits on the nominal WAN link and computes at nominal speed —
+    the degenerate (tail = 1) case of ``round_time_hetero``.
+    """
+    return round_time_hetero(sizes, fed, t_compute, links)
+
+
+def round_time_hetero(
+    sizes: MessageSizes,
+    fed: FederationConfig,
+    t_compute: float,
+    links: LinkModel = WAN,
+    dev_tail: float = 1.0,
+    compute_tail: float = 1.0,
+) -> float:
+    """§VII-A3 round time under device heterogeneity (straggler tails).
+
+    Every device-parallel event (θ2 local aggregation, ζ exchange legs that
+    touch a device link) completes when the SLOWEST sampled device does, so
+    those terms scale by ``dev_tail`` — the max latency multiplier over the
+    round's cohort (from a seeded trace, see ``core/population.py``).
+    ``compute_tail`` scales the P·t_c term the same way (slowest device gates
+    each lockstep SGD iteration). Backbone (edge/hospital↔cloud) legs are not
+    device-gated and stay at the nominal broadband constants. Tails of 1.0
+    reproduce the paper's symmetric model exactly.
     """
     P = fed.global_interval
     lam = fed.lam  # FederationConfig validates P % Q == 0 (no silent flooring)
@@ -116,12 +140,13 @@ def round_time(
     # exchange: devices upload ζ2 (their own sample's share, parallel);
     # edge sends θ0 + Z1 down to devices; hospital<->edge over broadband
     z2_per_dev = sizes.z2 / max(sizes.n_active, 1)
-    t_e = (
-        z2_per_dev / links.dev_up
-        + (sizes.theta0 + sizes.z1) / links.dev_down
-        + (sizes.z1 + sizes.z2 + sizes.theta0) / links.bb_up
+    t_e_dev = z2_per_dev / links.dev_up + (sizes.theta0 + sizes.z1) / links.dev_down
+    t_e_bb = (sizes.z1 + sizes.z2 + sizes.theta0) / links.bb_up
+    return (
+        t_g
+        + lam * ((t_l + t_e_dev) * dev_tail + t_e_bb)
+        + P * t_compute * compute_tail
     )
-    return t_g + lam * (t_l + t_e) + P * t_compute
 
 
 def time_to_step(

@@ -82,6 +82,7 @@ class AdaptiveConfig:
     total_steps: int = 128          # T: total SGD iterations to spend
     target_bound: float = math.inf  # Ξ: keep Γ(P,Q) ≤ this (Prop. 1 target)
     byte_budget: float = math.inf   # honor this end-of-run byte projection
+    time_budget: float = math.inf   # honor this end-of-run wall-clock projection (s)
     max_interval: int = 32          # cap on P = Q
     eta_min: float = 1e-4
     eta_max: float = 0.1
@@ -102,6 +103,7 @@ class RoundPlan:
     rung: int                 # index into the compression ladder
     gamma: float              # Γ(P,Q) at the picked settings
     projected_bytes: float    # end-of-run byte projection at these settings
+    projected_seconds: float = 0.0  # end-of-run wall-clock projection (0 = unmodeled)
 
 
 class AdaptiveResult(NamedTuple):
@@ -135,12 +137,24 @@ def plan_round(
     cfg: AdaptiveConfig,
     fed: FederationConfig,
     sizes_of,
+    time_of=None,
+    seconds_spent: float = 0.0,
 ) -> RoundPlan:
     """Pure planning step: probes -> (P, Q, η, compression rung).
 
     ``sizes_of(k_frac, levels)`` returns the per-group ``MessageSizes`` at a
     ladder rung. Separated from the runner so the governor logic is unit-
     testable without training anything.
+
+    ``time_of(P, rung)`` (optional) returns the modeled wall-clock seconds of
+    ONE global round at P = Q and that ladder rung — under straggler tails
+    when the caller is a population run (``population.expected_round_seconds``).
+    With it, the eq. (19) byte governor becomes a joint byte + wall-clock
+    governor: the projection that busts EITHER budget first ratchets the
+    compression ladder, then amortizes harder with a larger P = Q (which
+    divides the per-round t_g and per-interval exchange overheads over more
+    SGD steps), so the loop optimizes time-to-accuracy rather than bytes
+    alone.
     """
     rho = max(probe["rho"], 1e-6)
     delta = max(probe["delta"], 1e-9)
@@ -166,6 +180,15 @@ def plan_round(
         ) * fed.num_groups
         return bytes_spent + per_iter * T_rem
 
+    def projected_s(P: int, rung: int) -> float:
+        if time_of is None:
+            return 0.0
+        return seconds_spent + time_of(P, rung) * (T_rem / P)
+
+    def over_budget(P: int, rung: int) -> bool:
+        return (projected(P, rung) > cfg.byte_budget
+                or projected_s(P, rung) > cfg.time_budget)
+
     # strategies 2 + 1: optimal sync interval, with Q = P
     P = strategy2_optimal_interval(F_cur, rho, delta, eta_prev, T_rem)
     P = _pow2_floor(max(1, min(P, cfg.max_interval, T_rem)))
@@ -176,19 +199,20 @@ def plan_round(
         P //= 2
         eta = eta_for(P)
 
-    # byte governor: tighten the message until the projection fits the budget
-    while projected(P, rung) > cfg.byte_budget and rung < len(cfg.ladder) - 1:
+    # byte/wall-clock governor: tighten the message until both projections fit
+    while over_budget(P, rung) and rung < len(cfg.ladder) - 1:
         rung += 1
-    # tightest rung still over budget -> amortize harder with a larger P = Q,
-    # as long as the Theorem-1 target allows it
-    while (projected(P, rung) > cfg.byte_budget
+    # tightest rung still over a budget -> amortize harder with a larger
+    # P = Q, as long as the Theorem-1 target allows it
+    while (over_budget(P, rung)
            and 2 * P <= min(cfg.max_interval, T_rem)
            and gamma(2 * P, eta_for(2 * P)) <= cfg.target_bound):
         P *= 2
         eta = eta_for(P)
 
     return RoundPlan(P=P, Q=P, eta=eta, rung=rung,
-                     gamma=gamma(P, eta), projected_bytes=projected(P, rung))
+                     gamma=gamma(P, eta), projected_bytes=projected(P, rung),
+                     projected_seconds=projected_s(P, rung))
 
 
 # neutral probe seed: the first plan degenerates to P = Q = 1 and the online
@@ -242,11 +266,14 @@ class ControllerCore:
     """
 
     def __init__(self, cfg: AdaptiveConfig, fed: FederationConfig, sizes_of,
-                 eta0: float, probe: Optional[Dict[str, float]] = None):
+                 eta0: float, probe: Optional[Dict[str, float]] = None,
+                 time_of=None):
         self.cfg, self.fed, self.sizes_of = cfg, fed, sizes_of
+        self.time_of = time_of  # (P, rung) -> modeled seconds of one round
         self.probe = dict(probe) if probe is not None else dict(NEUTRAL_PROBE)
         self.steps_done = 0
         self.bytes_spent = 0.0
+        self.seconds_spent = 0.0  # wall-clock ledger (modeled, simulated time)
         self.rung = 0
         self.eta_prev = eta0
         self.history: List[Dict[str, Any]] = []
@@ -259,17 +286,29 @@ class ControllerCore:
         """Next round's settings + its (k_frac, levels) ladder rung."""
         plan = plan_round(self.probe, self.steps_done, self.bytes_spent,
                           self.rung, self.eta_prev, self.cfg, self.fed,
-                          self.sizes_of)
+                          self.sizes_of, time_of=self.time_of,
+                          seconds_spent=self.seconds_spent)
         self.rung = plan.rung  # the ladder is a ratchet: never loosened
         return plan, self.cfg.ladder[plan.rung]
 
-    def record(self, plan: RoundPlan, stats) -> Dict[str, Any]:
-        """Charge the executed round's eq. (19) bill, log it, update probes."""
+    def record(self, plan: RoundPlan, stats,
+               seconds: Optional[float] = None) -> Dict[str, Any]:
+        """Charge the executed round's eq. (19) bill, log it, update probes.
+
+        ``seconds`` is the round's realized simulated wall-clock (e.g. the
+        population scheduler's deadline); when omitted the ``time_of`` model
+        at the executed (P, rung) is charged instead. Both feed the same
+        ledger the planner projects against.
+        """
         k_frac, levels = self.cfg.ladder[plan.rung]
         round_bytes = CM.per_round_bytes(
             self.sizes_of(k_frac, levels), plan.P, plan.Q, self.fed.num_groups)
         self.bytes_spent += round_bytes
         self.steps_done += plan.P
+        if seconds is None and self.time_of is not None:
+            seconds = self.time_of(plan.P, plan.rung)
+        round_seconds = float(seconds) if seconds is not None else 0.0
+        self.seconds_spent += round_seconds
         rec = {
             "round": len(self.history), "P": plan.P, "Q": plan.Q,
             "eta": plan.eta, "rung": plan.rung,
@@ -279,6 +318,8 @@ class ControllerCore:
             "grad_norm_sq": self.probe["grad_norm_sq"], "F0": self.probe["F0"],
             "round_bytes": round_bytes, "bytes_total": self.bytes_spent,
             "projected_bytes": plan.projected_bytes,
+            "round_seconds": round_seconds, "seconds_total": self.seconds_spent,
+            "projected_seconds": plan.projected_seconds,
             "steps_done": self.steps_done,
             "loss_last": float(np.asarray(stats["loss"])[-1]),
         }
@@ -286,6 +327,29 @@ class ControllerCore:
         self.eta_prev = plan.eta
         self.probe = update_probe(self.probe, stats, plan.Q, self.cfg)
         return rec
+
+
+def hsgd_sizes_of(state: HSGDState, fed: FederationConfig):
+    """sizes_of(k, levels) -> per-group MessageSizes for the governor, with
+    z1/z2 element counts read off the live exchange buffers (per group =
+    total / M). Shared by the adaptive runner and the population runner."""
+    M = fed.num_groups
+    params_shapes = {
+        "theta0": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta0),
+        "theta1": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta1),
+        "theta2": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), state.theta2),
+    }
+    z1_el = tree_size(state.stale["z1"]) // M
+    z2_el = tree_size(state.stale["z2"]) // M
+
+    def sizes_of(k_frac: float, levels: int):
+        return CM.message_sizes(params_shapes, z1_el, z2_el,
+                                fed.sampled_devices, k_frac, levels)
+
+    return sizes_of
 
 
 class AdaptiveHSGDRunner:
@@ -308,26 +372,7 @@ class AdaptiveHSGDRunner:
     # -- comm-model plumbing -------------------------------------------------
 
     def _sizes_of(self, state: HSGDState):
-        """Returns sizes_of(k, levels) -> per-group MessageSizes for the
-        governor, with z1/z2 element counts read off the live exchange
-        buffers (per group = total / M)."""
-        M = self.fed.num_groups
-        params_shapes = {
-            "theta0": jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta0),
-            "theta1": jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), state.theta1),
-            "theta2": jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), state.theta2),
-        }
-        z1_el = tree_size(state.stale["z1"]) // M
-        z2_el = tree_size(state.stale["z2"]) // M
-
-        def sizes_of(k_frac: float, levels: int):
-            return CM.message_sizes(params_shapes, z1_el, z2_el,
-                                    self.fed.sampled_devices, k_frac, levels)
-
-        return sizes_of
+        return hsgd_sizes_of(state, self.fed)
 
     # -- main loop -----------------------------------------------------------
 

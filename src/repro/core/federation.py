@@ -30,9 +30,32 @@ def _constrain_grouped(tree):
     return jax.tree.map(lambda x: constrain(x, _group_axes(x)), tree)
 
 
-def local_aggregate(theta2_active):
-    """Eq. (1): θ2_m = mean over the sampled devices. [M, A, ...] -> [M, ...]."""
-    return _constrain_grouped(jax.tree.map(lambda x: jnp.mean(x, axis=1), theta2_active))
+def local_aggregate(theta2_active, mask=None):
+    """Eq. (1): θ2_m = mean over the sampled devices. [M, A, ...] -> [M, ...].
+
+    ``mask`` ([M, A], 1 = real cohort member, 0 = padding slot) restricts the
+    mean to the round's actual participants — the cohort path pads device
+    slots to a power-of-two bucket, and padded slots must not dilute θ2_m.
+    A group with an empty cohort falls back to the plain mean (its slots are
+    uniform between rounds, so the fallback is exact; its global weight is
+    zeroed by the scheduler anyway).
+    """
+    if mask is None:
+        return _constrain_grouped(
+            jax.tree.map(lambda x: jnp.mean(x, axis=1), theta2_active))
+    w = mask.astype(jnp.float32)
+    cnt = jnp.sum(w, axis=1)  # [M]
+    safe = jnp.maximum(cnt, 1.0)
+
+    def agg(x):
+        wb = w.reshape(w.shape + (1,) * (x.ndim - 2)).astype(x.dtype)
+        masked = jnp.sum(x * wb, axis=1) / safe.reshape(
+            (-1,) + (1,) * (x.ndim - 2)).astype(x.dtype)
+        plain = jnp.mean(x, axis=1)
+        keep = (cnt > 0).reshape((-1,) + (1,) * (x.ndim - 2))
+        return jnp.where(keep, masked, plain)
+
+    return _constrain_grouped(jax.tree.map(agg, theta2_active))
 
 
 def global_aggregate(theta, group_weights):

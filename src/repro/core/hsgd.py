@@ -50,17 +50,13 @@ class HSGDState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def init_state(key, model: HybridModel, fed: FederationConfig, data, dtype=jnp.float32) -> HSGDState:
-    """All groups start from the same global model (Alg. 1 line 1)."""
-    k_init, k_run = jax.random.split(key)
-    params = model.init(k_init, dtype)
-    M, A = fed.num_groups, fed.sampled_devices
-    theta0 = F.broadcast_to_groups(params["theta0"], M)
-    theta1 = F.broadcast_to_groups(params["theta1"], M)
-    theta2 = F.broadcast_to_devices(F.broadcast_to_groups(params["theta2"], M), A)
-    # placeholder stale ctx/batch: every run/round exchanges before the first
-    # SGD step, so the placeholders are overwritten unread — shape them with
-    # eval_shape (zero FLOPs) instead of running real forward passes.
+def _placeholder_ctx(model: HybridModel, theta1, theta2, data, M: int, A: int):
+    """Placeholder (batch, z1, z2) shaped for A device slots per group.
+
+    Every run/round exchanges before the first SGD step, so the placeholders
+    are overwritten unread — shape them with eval_shape (zero FLOPs) instead
+    of running real forward passes.
+    """
     idx = jnp.zeros((M, A), jnp.int32)
     batch = F.gather_batch(data, idx)
     z_shapes = jax.eval_shape(
@@ -71,9 +67,41 @@ def init_state(key, model: HybridModel, fed: FederationConfig, data, dtype=jnp.f
         theta1, theta2, batch,
     )
     z1, z2 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), z_shapes)
+    return batch, z1, z2
+
+
+def init_state(key, model: HybridModel, fed: FederationConfig, data, dtype=jnp.float32) -> HSGDState:
+    """All groups start from the same global model (Alg. 1 line 1)."""
+    k_init, k_run = jax.random.split(key)
+    params = model.init(k_init, dtype)
+    M, A = fed.num_groups, fed.sampled_devices
+    theta0 = F.broadcast_to_groups(params["theta0"], M)
+    theta1 = F.broadcast_to_groups(params["theta1"], M)
+    theta2 = F.broadcast_to_devices(F.broadcast_to_groups(params["theta2"], M), A)
+    batch, z1, z2 = _placeholder_ctx(model, theta1, theta2, data, M, A)
     # distinct buffers from theta0: donation in run() must not see aliases
     stale = {"theta0": jax.tree.map(jnp.copy, theta0), "z1": z1, "z2": z2}
     return HSGDState(theta0, theta1, theta2, stale, batch, k_run, jnp.zeros((), jnp.int32))
+
+
+def resize_cohort(state: HSGDState, model: HybridModel, data, A_new: int) -> HSGDState:
+    """Re-bucket the device-slot axis A between rounds ([M, A, ...] -> [M, A_new, ...]).
+
+    Valid only at a round boundary, where every cohort round has already
+    checked its device towers back in (θ2 slots uniform: the executor ends
+    with θ2 ← broadcast(masked eq. (1))), so collapsing the slot axis by eq.
+    (1) and re-broadcasting is exact. The stale/batch placeholders are
+    re-shaped the same way ``init_state`` shapes them — the next round's
+    first exchange overwrites them unread.
+    """
+    M, A = jax.tree_util.tree_leaves(state.theta2)[0].shape[:2]
+    if A == A_new:
+        return state
+    theta2_group = F.local_aggregate(state.theta2)
+    theta2 = F.broadcast_to_devices(theta2_group, A_new)
+    batch, z1, z2 = _placeholder_ctx(model, state.theta1, theta2, data, M, A_new)
+    stale = {"theta0": state.stale["theta0"], "z1": z1, "z2": z2}
+    return state._replace(theta2=theta2, stale=stale, batch=batch)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +233,8 @@ def exchange(
     compression_k: float = 0.0,
     quant_levels: int = 0,
     fused: bool = True,
+    idx: Optional[jnp.ndarray] = None,
+    pmask: Optional[jnp.ndarray] = None,
 ) -> HSGDState:
     """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange.
 
@@ -212,12 +242,19 @@ def exchange(
     + ζ2) is compressed in ONE fused top-k+quantize row-matrix call (Pallas
     kernel on TPU, fused jnp elsewhere). ``fused=False`` keeps the pre-fusion
     leaf-wise sort-based path for benchmarking.
+
+    The cohort path (see ``core/population.py``) pins the round's participants
+    by passing ``idx`` ([M, A] data-row indices, padded to the bucket size by
+    repeating real members) and ``pmask`` ([M, A], 0 on padding slots): the
+    per-interval A_m draw is skipped and eq. (1) excludes the padding slots.
     """
     key, k_sample = jax.random.split(state.key)
-    theta2_group = F.local_aggregate(state.theta2)  # eq (1)
-    theta2 = F.broadcast_to_devices(theta2_group, fed.sampled_devices)  # line 15
+    theta2_group = F.local_aggregate(state.theta2, pmask)  # eq (1)
+    A = fed.sampled_devices if idx is None else idx.shape[1]
+    theta2 = F.broadcast_to_devices(theta2_group, A)  # line 15
 
-    idx = F.sample_participants(k_sample, fed)  # line 13
+    if idx is None:
+        idx = F.sample_participants(k_sample, fed)  # line 13
     batch = F.gather_batch(data, idx)
 
     z1 = _h1_groups(model, state.theta1, batch["x1"])
@@ -241,8 +278,15 @@ def exchange(
 
 
 def global_aggregation(state: HSGDState, fed: FederationConfig, group_weights) -> HSGDState:
-    """Eq. (2) + broadcasts (Alg. 1 lines 3–9)."""
-    M, A = fed.num_groups, fed.sampled_devices
+    """Eq. (2) + broadcasts (Alg. 1 lines 3–9).
+
+    The device-slot count is read off the state (not ``fed.sampled_devices``)
+    so the cohort path, whose slot axis is the current bucket size, reuses
+    this unchanged. Slots are uniform at round boundaries (check-in), so the
+    unmasked eq. (1) here is exact.
+    """
+    M = fed.num_groups
+    A = jax.tree_util.tree_leaves(state.theta2)[0].shape[1]
     theta2_group = F.local_aggregate(state.theta2)
     g0 = F.global_aggregate(state.theta0, group_weights)
     g1 = F.global_aggregate(state.theta1, group_weights)
@@ -340,7 +384,7 @@ class HSGDRunner:
     def _round_impl(self, state: HSGDState, data, group_weights,
                     lr: Union[Callable, jnp.ndarray, float],
                     Q: int, lam: int, compression_k: float, quant_levels: int,
-                    collect: bool):
+                    collect: bool, idx=None, pmask=None):
         """One global round with staged scan lengths (Λ intervals × Q steps).
 
         ``lr`` is either a step->η schedule (fixed-interval ``run`` path) or a
@@ -357,7 +401,7 @@ class HSGDRunner:
         do_exchange = partial(
             exchange, model, data=data, fed=fed,
             compression_k=compression_k, quant_levels=quant_levels,
-            fused=self.fused_compression,
+            fused=self.fused_compression, idx=idx, pmask=pmask,
         )
 
         if not collect:
@@ -433,6 +477,53 @@ class HSGDRunner:
             self._round_cache[key] = fn
         return fn
 
+    def cohort_round_fn(self, P: int, Q: int, cohort_size: int,
+                        compression_k: Optional[float] = None,
+                        quant_levels: Optional[int] = None,
+                        collect_stats: bool = True):
+        """Compiled round executor over a sampled cohort of device slots.
+
+        fn(state, data, group_weights, lr, participants, pmask) -> (state,
+        stats|losses). ``participants`` [M, cohort_size] are the round's data
+        rows (padded to the power-of-two bucket by repeating real members),
+        ``pmask`` [M, cohort_size] is 1 on real slots; ``group_weights`` is a
+        traced [M] vector, so the semi-async scheduler's staleness-damped
+        effective weights never trigger a recompile. The state's device axis
+        must already equal ``cohort_size`` (see ``resize_cohort``).
+
+        The round ends with a check-in — θ2 ← broadcast(masked eq. (1)) — so
+        device slots leave the round uniform: padding slots never leak into
+        the next round and re-bucketing between rounds stays exact.
+
+        Cached per (P, Q, cohort_size, k, b, collect) bucket: a population run
+        whose cohort sizes vary round-to-round compiles one executor per
+        bucket, not one per round.
+        """
+        if P < 1 or Q < 1 or P % Q:
+            raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
+        if cohort_size < 1:
+            raise ValueError(f"cohort_size={cohort_size} must be >= 1")
+        k = self.train.compression_k if compression_k is None else compression_k
+        b = self.train.quantization_bits if quant_levels is None else quant_levels
+        key = (P, Q, cohort_size, k, b, collect_stats)
+        fn = self._round_cache.get(key)
+        if fn is None:
+            lam = P // Q
+            A = cohort_size
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fn(state, data, group_weights, lr, participants, pmask):
+                state, out = self._round_impl(
+                    state, data, group_weights, lr, Q, lam, k, b,
+                    collect_stats, idx=participants, pmask=pmask)
+                theta2_group = F.local_aggregate(state.theta2, pmask)
+                state = state._replace(
+                    theta2=F.broadcast_to_devices(theta2_group, A))
+                return state, out
+
+            self._round_cache[key] = fn
+        return fn
+
     def run(self, state: HSGDState, data, group_weights, rounds: int,
             mesh: Optional[Mesh] = None):
         """Execute ``rounds`` global rounds; returns (state, per-step losses).
@@ -456,3 +547,9 @@ class HSGDRunner:
 def make_group_weights(data) -> jnp.ndarray:
     """K_m weights from the per-group valid-sample counts."""
     return jnp.sum(data["valid"].astype(jnp.float32), axis=1)
+
+
+# checkpoint restores return a real HSGDState, not an anonymous namedtuple
+from repro.checkpoint.ckpt import register_state_class as _register_state_class  # noqa: E402
+
+_register_state_class(HSGDState)

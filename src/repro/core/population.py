@@ -1,0 +1,408 @@
+"""Population-scale federation: device registry, cohorts, semi-async rounds.
+
+ROADMAP item 1. The paper's experiments materialize every group and march
+them in lockstep; real e-health fleets (PAPERS.md: Nguyen et al. 2021,
+Bharati et al. 2022) are large device populations with availability windows,
+heterogeneous links, and stragglers. This module layers that population on
+top of the existing partition/HSGD machinery *as a simulation*:
+
+  DeviceRegistry      — per-group device traces drawn from a single seed:
+                        latency and compute multipliers (lognormal) plus a
+                        periodic availability window per device. Each device
+                        holds one valid data row of ``data/partition.py``'s
+                        non-IID split (several devices may hold the same row
+                        when the simulated population outnumbers the rows).
+  Cohort sampling     — each round samples the available devices of every
+                        group (without replacement, capped at
+                        ``target_cohort``), pads to the next power-of-two
+                        bucket by repeating real members, and records a
+                        participation mask + per-group straggler tails. The
+                        compiled executors are cached per bucket
+                        (``HSGDRunner.cohort_round_fn``), so varying cohorts
+                        never recompile within a bucket.
+  PopulationScheduler — the simulated clock. ``sync`` waits for the slowest
+                        participating group; ``semi_async`` closes the round
+                        at a duration quantile (the deadline) and applies
+                        late groups' updates at the NEXT global aggregation
+                        with staleness-damped weights (FedAsync-style
+                        ``damping**staleness``; dropped past
+                        ``max_staleness``) instead of blocking everyone.
+  make_time_of        — the wall-clock model ``time_of(P, rung)`` the
+                        adaptive controller's governor projects against
+                        (``controller.plan_round``), built from the
+                        registry's typical cohort tails so the loop optimizes
+                        time-to-accuracy under stragglers, not bytes alone.
+
+Everything is reproducible from ``PopulationConfig.seed`` alone: traces use
+``default_rng([seed, 0])``-style streams and round r's cohort uses
+``default_rng([seed, 1, r])``, so the same seed yields the identical
+participant schedule and latency draws on every run (pinned by a test).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional
+
+import numpy as np
+
+from repro.common.buckets import pow2_ceil
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import comm_model as CM
+from repro.core.hsgd import (
+    HSGDRunner,
+    HSGDState,
+    init_state,
+    make_group_weights,
+    resize_cohort,
+)
+
+
+@dataclass(frozen=True)
+class PopulationConfig:
+    """Simulated-fleet knobs (all randomness derives from ``seed``)."""
+
+    seed: int = 0
+    devices_per_group: int = 64     # simulated population N per group
+    target_cohort: int = 8          # devices sampled per group per round
+    lat_sigma: float = 0.6          # lognormal sigma of device link multipliers
+    comp_sigma: float = 0.4         # lognormal sigma of device compute multipliers
+    duty_min: float = 0.5           # availability duty-cycle range
+    duty_max: float = 0.95
+    period: float = 600.0           # availability window period (sim seconds)
+    deadline_quantile: float = 0.8  # semi-async: close the round here
+    staleness_damping: float = 0.6  # late update weight *= damping**staleness
+    max_staleness: int = 4          # older than this -> dropped
+
+
+class Cohort(NamedTuple):
+    """One round's sampled participants, padded to a pow2 bucket."""
+
+    idx: np.ndarray        # [M, A] data-row indices (pads repeat real members)
+    pmask: np.ndarray      # [M, A] 1.0 on real slots, 0.0 on padding
+    counts: np.ndarray     # [M] real members per group (0 = group absent)
+    dev_tail: np.ndarray   # [M] max link multiplier over real members (1 if none)
+    comp_tail: np.ndarray  # [M] max compute multiplier over real members
+
+
+class DeviceRegistry:
+    """Seeded per-device traces for M groups × N simulated devices.
+
+    ``lat_mult``/``comp_mult`` [M, N] are fixed per-device multipliers on the
+    nominal WAN link and compute times. ``duty``/``phase`` define a periodic
+    availability window: device (m, j) is online at sim time t iff
+    ``(t/period + phase) mod 1 < duty``. ``data_row`` [M, N] maps each device
+    to a valid data row of the stacked partition.
+    """
+
+    def __init__(self, data: Dict[str, np.ndarray], cfg: PopulationConfig):
+        valid = np.asarray(data["valid"], bool)
+        M, K = valid.shape
+        N = cfg.devices_per_group
+        rng = np.random.default_rng([cfg.seed, 0])
+        self.cfg = cfg
+        self.num_groups, self.pop_per_group = M, N
+        self.lat_mult = np.exp(rng.normal(0.0, cfg.lat_sigma, (M, N)))
+        self.comp_mult = np.exp(rng.normal(0.0, cfg.comp_sigma, (M, N)))
+        # devices never beat the nominal link/compute speed: the paper's
+        # constants are the fleet's best case, multipliers only slow down
+        self.lat_mult = np.maximum(self.lat_mult, 1.0)
+        self.comp_mult = np.maximum(self.comp_mult, 1.0)
+        self.duty = rng.uniform(cfg.duty_min, cfg.duty_max, (M, N))
+        self.phase = rng.uniform(0.0, 1.0, (M, N))
+        rows = np.zeros((M, N), np.int64)
+        for m in range(M):
+            vm = np.flatnonzero(valid[m])
+            if vm.size == 0:
+                vm = np.arange(K)
+            rows[m] = vm[rng.integers(0, vm.size, N)]
+        self.data_row = rows
+
+    def available(self, now: float) -> np.ndarray:
+        """[M, N] bool: which devices are inside their window at sim time now."""
+        return ((now / self.cfg.period + self.phase) % 1.0) < self.duty
+
+    def sample_cohort(self, round_idx: int, now: float) -> Cohort:
+        """Round r's participants, deterministic in (seed, r, availability)."""
+        cfg = self.cfg
+        M = self.num_groups
+        rng = np.random.default_rng([cfg.seed, 1, round_idx])
+        avail = self.available(now)
+        picks: List[np.ndarray] = []
+        counts = np.zeros(M, np.int64)
+        for m in range(M):
+            cand = np.flatnonzero(avail[m])
+            n_take = min(cfg.target_cohort, cand.size)
+            picks.append(rng.choice(cand, size=n_take, replace=False)
+                         if n_take else np.zeros(0, np.int64))
+            counts[m] = n_take
+        A = pow2_ceil(max(1, int(counts.max())))
+        idx = np.zeros((M, A), np.int64)
+        pmask = np.zeros((M, A), np.float32)
+        dev_tail = np.ones(M)
+        comp_tail = np.ones(M)
+        for m in range(M):
+            devs = picks[m]
+            if devs.size:
+                padded = devs[np.arange(A) % devs.size]  # pads repeat members
+                idx[m] = self.data_row[m, padded]
+                pmask[m, : devs.size] = 1.0
+                dev_tail[m] = self.lat_mult[m, devs].max()
+                comp_tail[m] = self.comp_mult[m, devs].max()
+            else:
+                idx[m] = self.data_row[m, 0]  # unread: pmask stays 0, weight 0
+        return Cohort(idx, pmask, counts, dev_tail, comp_tail)
+
+    def typical_tails(self, quantile: float, n_draws: int = 8):
+        """Representative per-group cohort tails for the planner's time model:
+        the mean over ``n_draws`` seeded cohort draws of the max multiplier in
+        a ``target_cohort``-sized subset. Returns ([M] dev, [M] comp)."""
+        cfg = self.cfg
+        M, N = self.lat_mult.shape
+        rng = np.random.default_rng([cfg.seed, 2])
+        A = min(cfg.target_cohort, N)
+        dev = np.zeros((n_draws, M))
+        comp = np.zeros((n_draws, M))
+        for d in range(n_draws):
+            for m in range(M):
+                pick = rng.choice(N, size=A, replace=False)
+                dev[d, m] = self.lat_mult[m, pick].max()
+                comp[d, m] = self.comp_mult[m, pick].max()
+        return dev.mean(axis=0), comp.mean(axis=0)
+
+
+def cohort_durations(cohort: Cohort, sizes, P: int, Q: int, t_compute: float,
+                     links=CM.WAN) -> np.ndarray:
+    """[M] simulated seconds for each group's round under its cohort's tails."""
+    fed_pq = FederationConfig(local_interval=Q, global_interval=P)
+    return np.array([
+        CM.round_time_hetero(sizes, fed_pq, t_compute, links,
+                             dev_tail=float(cohort.dev_tail[m]),
+                             compute_tail=float(cohort.comp_tail[m]))
+        for m in range(len(cohort.counts))
+    ])
+
+
+class PopulationScheduler:
+    """Simulated clock + staleness ledger over a DeviceRegistry.
+
+    Per round: sample a cohort at the current sim time, run the compiled
+    round, then ``settle`` with the per-group durations. ``settle`` advances
+    the clock by the round's deadline (max duration in ``sync`` mode, the
+    ``deadline_quantile`` in ``semi_async``), updates per-group staleness
+    (on-time -> 0, late -> +1), and returns the effective group weights the
+    NEXT round's global aggregation applies to the updates just produced:
+    ``base_w * damping**staleness``, zero for absent groups and for updates
+    older than ``max_staleness``.
+    """
+
+    def __init__(self, registry: DeviceRegistry, base_weights: np.ndarray,
+                 mode: str = "semi_async"):
+        if mode not in ("sync", "semi_async"):
+            raise ValueError(f"mode must be sync|semi_async, got {mode!r}")
+        self.registry = registry
+        self.cfg = registry.cfg
+        self.base_w = np.asarray(base_weights, np.float64)
+        self.mode = mode
+        self.now = 0.0
+        self.round = 0
+        self.staleness = np.zeros(registry.num_groups, np.int64)
+        self.stale_hist: Dict[int, int] = {}
+
+    def next_cohort(self) -> Cohort:
+        return self.registry.sample_cohort(self.round, self.now)
+
+    def settle(self, cohort: Cohort, durations: np.ndarray):
+        """Advance the clock; return (next-round weights [M], round record)."""
+        part = cohort.counts > 0
+        dur = np.asarray(durations, np.float64)
+        if not part.any():
+            deadline = 0.0
+            on_time = part
+        elif self.mode == "sync":
+            deadline = float(dur[part].max())
+            on_time = part
+        else:
+            deadline = float(np.quantile(dur[part], self.cfg.deadline_quantile))
+            on_time = part & (dur <= deadline)
+        self.staleness = np.where(on_time, 0, self.staleness + 1)
+        for s in self.staleness[part]:
+            self.stale_hist[int(s)] = self.stale_hist.get(int(s), 0) + 1
+        damp = np.where(self.staleness > self.cfg.max_staleness, 0.0,
+                        self.cfg.staleness_damping ** self.staleness)
+        w = self.base_w * part * damp
+        if w.sum() <= 0.0:  # nobody usable: fall back, never divide by zero
+            w = self.base_w.copy()
+        self.now += deadline
+        self.round += 1
+        rec = {
+            "round": self.round - 1,
+            "deadline": deadline,
+            "now": self.now,
+            "cohort_sizes": cohort.counts.tolist(),
+            "bucket": int(cohort.pmask.shape[1]),
+            "late": int((part & ~on_time).sum()),
+            "staleness": self.staleness.tolist(),
+        }
+        return w, rec
+
+
+def make_time_of(sizes_of, ladder, registry: DeviceRegistry, t_compute: float,
+                 mode: str = "semi_async", links=CM.WAN):
+    """Build the controller's ``time_of(P, rung)`` wall-clock model.
+
+    Projects one P = Q round's simulated seconds at a ladder rung using the
+    registry's typical cohort tails — the semi-async deadline quantile across
+    groups (or the max, in sync mode). This is what turns the byte governor
+    into a time-to-accuracy governor: compression rungs shrink the
+    device-gated exchange legs, larger P amortizes t_g, both visible to the
+    planner through this one callback.
+    """
+    cfg = registry.cfg
+    dev_t, comp_t = registry.typical_tails(cfg.deadline_quantile)
+
+    def time_of(P: int, rung: int) -> float:
+        k, b = ladder[rung]
+        sizes = sizes_of(k, b)
+        fed_pq = FederationConfig(local_interval=P, global_interval=P)
+        dur = np.array([
+            CM.round_time_hetero(sizes, fed_pq, t_compute, links,
+                                 dev_tail=float(dev_t[m]),
+                                 compute_tail=float(comp_t[m]))
+            for m in range(registry.num_groups)
+        ])
+        if mode == "sync":
+            return float(dur.max())
+        return float(np.quantile(dur, cfg.deadline_quantile))
+
+    return time_of
+
+
+# ---------------------------------------------------------------------------
+# Run loops (fixed-interval sync/semi-async, and the adaptive governor)
+# ---------------------------------------------------------------------------
+
+
+def _lr_at(train: TrainConfig, step: int) -> float:
+    if train.lr_halve_every:
+        return train.learning_rate * 0.5 ** (step // train.lr_halve_every)
+    return train.learning_rate
+
+
+def run_population(model, fed: FederationConfig, train: TrainConfig,
+                   data, pop: PopulationConfig, rounds: int,
+                   mode: str = "semi_async", t_compute: float = 0.05,
+                   links=CM.WAN, key=None,
+                   runner: Optional[HSGDRunner] = None) -> Dict[str, Any]:
+    """Fixed-(P, Q) population run over ``rounds`` sampled-cohort rounds.
+
+    Returns per-step losses, the sim-clock time at the END of each step's
+    round (for time-to-target curves), the scheduler's round records, and the
+    runner (so callers can assert the per-bucket compile discipline via
+    ``len(runner._round_cache)``).
+    """
+    import jax
+
+    from repro.core.controller import hsgd_sizes_of
+
+    if key is None:
+        key = jax.random.PRNGKey(pop.seed)
+    runner = runner or HSGDRunner(model, fed, train)
+    state = init_state(key, model, fed, data)
+    base_w = np.asarray(make_group_weights(data))
+    registry = DeviceRegistry(data, pop)
+    sched = PopulationScheduler(registry, base_w, mode=mode)
+    sizes_of = hsgd_sizes_of(state, fed)
+    sizes = sizes_of(train.compression_k, train.quantization_bits)
+    P, Q = fed.global_interval, fed.local_interval
+
+    w = base_w.copy()
+    losses: List[np.ndarray] = []
+    times: List[float] = []
+    history: List[Dict[str, Any]] = []
+    step = 0
+    for _ in range(rounds):
+        cohort = sched.next_cohort()
+        A = int(cohort.pmask.shape[1])
+        state = resize_cohort(state, model, data, A)
+        fn = runner.cohort_round_fn(P, Q, A, collect_stats=False)
+        state, round_losses = fn(state, data, w.astype(np.float32),
+                                 _lr_at(train, step), cohort.idx, cohort.pmask)
+        dur = cohort_durations(cohort, sizes, P, Q, t_compute, links)
+        w, rec = sched.settle(cohort, dur)
+        losses.append(np.asarray(jax.device_get(round_losses)))
+        times.extend([sched.now] * P)
+        history.append(rec)
+        step += P
+    return {
+        "losses": np.concatenate(losses) if losses else np.zeros(0),
+        "times": np.asarray(times),
+        "history": history,
+        "staleness_hist": dict(sched.stale_hist),
+        "sim_seconds": sched.now,
+        "runner": runner,
+        "state": state,
+    }
+
+
+def run_population_adaptive(model, fed: FederationConfig, train: TrainConfig,
+                            data, pop: PopulationConfig, cfg,
+                            t_compute: float = 0.05, links=CM.WAN,
+                            key=None,
+                            runner: Optional[HSGDRunner] = None) -> Dict[str, Any]:
+    """Adaptive population run: ControllerCore + wall-clock governor.
+
+    Each round the controller picks (P, Q, η, rung) against BOTH ledgers
+    (bytes and simulated seconds, via ``make_time_of``), the scheduler samples
+    a cohort, and the realized semi-async deadline is charged back with
+    ``core.record(..., seconds=...)``. ``cfg`` is an
+    ``controller.AdaptiveConfig`` (set ``time_budget`` to engage the
+    wall-clock governor).
+    """
+    import jax
+
+    from repro.core.controller import ControllerCore, hsgd_sizes_of
+
+    if key is None:
+        key = jax.random.PRNGKey(pop.seed)
+    runner = runner or HSGDRunner(model, fed, train)
+    state = init_state(key, model, fed, data)
+    base_w = np.asarray(make_group_weights(data))
+    registry = DeviceRegistry(data, pop)
+    sched = PopulationScheduler(registry, base_w, mode="semi_async")
+    sizes_of = hsgd_sizes_of(state, fed)
+    time_of = make_time_of(sizes_of, cfg.ladder, registry, t_compute,
+                           mode="semi_async", links=links)
+    core = ControllerCore(cfg, fed, sizes_of, eta0=train.learning_rate,
+                          time_of=time_of)
+
+    w = base_w.copy()
+    losses: List[np.ndarray] = []
+    times: List[float] = []
+    while not core.done:
+        plan, (k_frac, levels) = core.plan()
+        cohort = sched.next_cohort()
+        A = int(cohort.pmask.shape[1])
+        state = resize_cohort(state, model, data, A)
+        fn = runner.cohort_round_fn(plan.P, plan.Q, A, k_frac, levels,
+                                    collect_stats=True)
+        state, stats = fn(state, data, w.astype(np.float32), plan.eta,
+                          cohort.idx, cohort.pmask)
+        stats = jax.device_get(stats)
+        sizes = sizes_of(k_frac, levels)
+        dur = cohort_durations(cohort, sizes, plan.P, plan.Q, t_compute, links)
+        prev_now = sched.now
+        w, _ = sched.settle(cohort, dur)
+        # charge the realized semi-async deadline, not the planner's model
+        core.record(plan, stats, seconds=sched.now - prev_now)
+        losses.append(np.asarray(stats["loss"]))
+        times.extend([sched.now] * plan.P)
+    return {
+        "losses": np.concatenate(losses) if losses else np.zeros(0),
+        "times": np.asarray(times),
+        "history": core.history,
+        "staleness_hist": dict(sched.stale_hist),
+        "sim_seconds": sched.now,
+        "runner": runner,
+        "state": state,
+        "core": core,
+    }

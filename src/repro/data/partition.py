@@ -118,9 +118,22 @@ def sample_minibatch(
     data: Dict[str, np.ndarray], batch: int, rng: np.random.RandomState
 ) -> Dict[str, np.ndarray]:
     """Per-group mini-batch ξ_m (same batch index set per group — paper uses a
-    per-group mini-batch agreed between hospital and edge node)."""
+    per-group mini-batch agreed between hospital and edge node).
+
+    Sampling is restricted to ``valid`` rows: small groups are zero-padded to
+    the common K by ``hybrid_partition``, and the padded (0, label-0) rows are
+    fabricated data that must never enter a batch. Replacement only kicks in
+    when the batch exceeds a group's valid count.
+    """
     M, K = data["y"].shape
-    idx = np.stack([rng.choice(K, size=batch, replace=batch > K) for _ in range(M)])
+    valid = np.asarray(data["valid"], bool)
+    rows = []
+    for m in range(M):
+        vm = np.flatnonzero(valid[m])
+        if vm.size == 0:  # degenerate group: nothing real to sample
+            vm = np.arange(K)
+        rows.append(rng.choice(vm, size=batch, replace=batch > vm.size))
+    idx = np.stack(rows)
     out = {}
     for k in ("x1", "x2", "y", "valid"):
         out[k] = np.take_along_axis(

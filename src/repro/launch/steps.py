@@ -270,11 +270,28 @@ def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: in
 
 
 def make_global_agg() -> Callable:
-    """Eq. (2) over the leading group (pod) dim: mean + broadcast back."""
+    """Eq. (2) over the leading group (pod) dim: mean + broadcast back.
 
-    def agg(params):
+    ``pod_weights`` (optional traced [G]) makes it the weighted eq. (2) —
+    the pod-scale hook for the population layer's semi-async aggregation,
+    where a late pod group's update is applied with a staleness-damped
+    weight instead of blocking the round. None keeps the equal-weight mean,
+    and since the weights are traced, varying them never recompiles.
+    """
+
+    def agg(params, pod_weights=None):
+        if pod_weights is None:
+            def m(x):
+                g = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True).astype(x.dtype)
+                return jnp.broadcast_to(g, x.shape)
+
+            return jax.tree.map(m, params)
+        w = pod_weights.astype(jnp.float32)
+        w = w / jnp.sum(w)
+
         def m(x):
-            g = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True).astype(x.dtype)
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            g = jnp.sum(x.astype(jnp.float32) * wb, axis=0, keepdims=True).astype(x.dtype)
             return jnp.broadcast_to(g, x.shape)
 
         return jax.tree.map(m, params)
@@ -471,10 +488,13 @@ class LLMRoundRunner:
     _round_cache: Dict = field(default_factory=dict, compare=False, repr=False)
 
     def _round_impl(self, params, batches, eta, Q: int, lam: int,
-                    compression_k: float, quant_levels: int, collect: bool):
+                    compression_k: float, quant_levels: int, collect: bool,
+                    pod_weights=None):
         model = self.model
         if self.n_pods > 1:
-            params = make_global_agg()(params)  # eq. (2) across pod groups
+            # eq. (2) across pod groups; pod_weights = the population layer's
+            # staleness-damped semi-async weights (None = synchronous mean)
+            params = make_global_agg()(params, pod_weights)
         exch = jax.vmap(make_exchange_step(model, compression_k, quant_levels))
 
         if not collect:
@@ -534,10 +554,12 @@ class LLMRoundRunner:
                  quant_levels: int = 0, collect_stats: bool = True):
         """Compiled single-round executor for a (P, Q, k, b) bucket.
 
-        fn(params, batches, eta) -> (params, stats|losses). ``batches`` leaves
-        lead with [Λ = P/Q, G, ...]; ``params`` is donated; ``eta`` is traced.
-        Cached per bucket — a run whose cadence varies round-to-round pays one
-        compile per distinct bucket, not one per round.
+        fn(params, batches, eta, pod_weights=None) -> (params, stats|losses).
+        ``batches`` leaves lead with [Λ = P/Q, G, ...]; ``params`` is donated;
+        ``eta`` and ``pod_weights`` (the semi-async staleness weights, when
+        given) are traced. Cached per bucket — a run whose cadence varies
+        round-to-round pays one compile per distinct bucket, not one per
+        round.
         """
         if P < 1 or Q < 1 or P % Q:
             raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
@@ -547,10 +569,10 @@ class LLMRoundRunner:
             lam = P // Q
 
             @functools.partial(jax.jit, donate_argnums=(0,))
-            def fn(params, batches, eta):
+            def fn(params, batches, eta, pod_weights=None):
                 return self._round_impl(params, batches, eta, Q, lam,
                                         compression_k, quant_levels,
-                                        collect_stats)
+                                        collect_stats, pod_weights)
 
             self._round_cache[key] = fn
         return fn

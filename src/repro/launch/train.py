@@ -72,6 +72,12 @@ def run_ehealth(args) -> dict:
     data = {k: jnp.asarray(v) for k, v in raw.items()}
     w = make_group_weights(data)
 
+    if args.population:
+        if algo != "hsgd":
+            raise SystemExit(
+                f"--population drives the HSGD cohort loop; got --algorithm {algo}")
+        return _run_population_cli(args, model, fed, train, data)
+
     runner, eff_fed = make_runner(algo, model, fed, train)
     key = jax.random.PRNGKey(args.seed)
     if algo == "jfl":
@@ -123,6 +129,59 @@ def run_ehealth(args) -> dict:
         save_checkpoint(args.checkpoint, gm, step=len(losses), extra={"metrics": m})
         print(f"checkpoint -> {args.checkpoint}")
     return m
+
+
+def _run_population_cli(args, model, fed, train, data) -> dict:
+    """Population-scale cohort run (ROADMAP item 1): simulated device fleet,
+    per-round cohort sampling, sync / semi-async / adaptive wall-clock modes."""
+    from repro.core.population import (
+        PopulationConfig,
+        run_population,
+        run_population_adaptive,
+    )
+
+    pop = PopulationConfig(
+        seed=args.trace_seed if args.trace_seed is not None else args.seed,
+        devices_per_group=args.pop_devices,
+        target_cohort=args.cohort,
+        deadline_quantile=args.deadline_quantile,
+        staleness_damping=args.staleness_damping,
+        max_staleness=args.max_staleness,
+    )
+    t0 = time.time()
+    if args.population == "adaptive":
+        acfg = AdaptiveConfig(
+            total_steps=args.rounds * fed.global_interval,
+            target_bound=args.target_bound,
+            byte_budget=args.byte_budget_mb * 1e6,
+            time_budget=args.time_budget,
+            max_interval=args.max_interval,
+            eta_max=max(args.lr * 10, 0.05),
+            ladder=ladder_from(args.compression_k, args.quantization),
+            init_probe=False,
+        )
+        res = run_population_adaptive(model, fed, train, data, pop, acfg,
+                                      t_compute=args.t_compute)
+    else:
+        res = run_population(model, fed, train, data, pop, rounds=args.rounds,
+                             mode=args.population, t_compute=args.t_compute)
+    out = {
+        "mode": args.population,
+        "trace_seed": pop.seed,
+        "steps": int(len(res["losses"])),
+        "loss_first": float(res["losses"][0]),
+        "loss_last": float(res["losses"][-1]),
+        "sim_seconds": res["sim_seconds"],
+        "staleness_hist": {str(k): v for k, v in res["staleness_hist"].items()},
+        "executors_compiled": len(res["runner"]._round_cache),
+        "wall_s": round(time.time() - t0, 2),
+    }
+    print(json.dumps(out, indent=1))
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, res["state"], step=len(res["losses"]),
+                        extra={"sim_seconds": res["sim_seconds"]})
+        print(f"checkpoint -> {args.checkpoint}")
+    return out
 
 
 def run_llm(args) -> dict:
@@ -228,6 +287,29 @@ def main(argv=None):
                     help="Theorem-1 target Ξ the controller keeps Γ(P,Q) under")
     ap.add_argument("--max-interval", type=int, default=32,
                     help="cap on the adaptive P = Q")
+    ap.add_argument("--population", default=None,
+                    choices=["sync", "semi_async", "adaptive"],
+                    help="population-scale cohort run over a simulated device "
+                         "fleet: sync (barrier rounds), semi_async (deadline "
+                         "quantile + staleness-damped late updates), or "
+                         "adaptive (semi_async + the wall-clock governor)")
+    ap.add_argument("--pop-devices", type=int, default=64,
+                    help="simulated population size per group (registry N)")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="devices sampled per group per round")
+    ap.add_argument("--deadline-quantile", type=float, default=0.8,
+                    help="semi-async round deadline as a duration quantile")
+    ap.add_argument("--staleness-damping", type=float, default=0.6,
+                    help="late update weight multiplier per round of staleness")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="updates older than this are dropped, not damped")
+    ap.add_argument("--t-compute", type=float, default=0.05,
+                    help="nominal per-iteration device compute time (s)")
+    ap.add_argument("--time-budget", type=float, default=float("inf"),
+                    help="simulated wall-clock budget (s) for the adaptive "
+                         "population governor")
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="population trace seed (defaults to --seed)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

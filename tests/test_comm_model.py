@@ -1,0 +1,110 @@
+"""§VII-A3 wall-time model: hand-computed WAN expectations + property sweeps.
+
+The hypothesis-powered twins of the property sweeps live in
+``test_properties.py`` (the repo's optional-hypothesis module); the seeded
+grid sweeps here always run, so the invariants stay covered even where
+hypothesis isn't installed.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.common.config import FederationConfig
+from repro.core.comm_model import (
+    MBIT,
+    WAN,
+    MessageSizes,
+    round_time,
+    round_time_hetero,
+    time_to_step,
+)
+
+SIZES = MessageSizes(theta0=4e5, theta1=8e5, theta2=1e5, z1=6e4, z2=8e4, n_active=4)
+
+
+def test_round_time_matches_hand_computed_wan():
+    """t = t_g + Λ(t_l + t_e) + P·t_c, every term recomputed by hand from the
+    paper's WAN constants (mobile 110/14 Mbps down/up, broadband 204/74)."""
+    P, Q, t_c = 8, 2, 0.05
+    fed = FederationConfig(local_interval=Q, global_interval=P)
+    dev_up, dev_down = 14 * 1e6 / 8, 110 * 1e6 / 8
+    bb_up, bb_down = 74 * 1e6 / 8, 204 * 1e6 / 8
+    up = 4e5 + 8e5 + 1e5
+    t_g = up / bb_up + up / bb_down
+    t_l = 1e5 / dev_up + 1e5 / dev_down
+    t_e = (8e4 / 4) / dev_up + (4e5 + 6e4) / dev_down + (6e4 + 8e4 + 4e5) / bb_up
+    expect = t_g + (P // Q) * (t_l + t_e) + P * t_c
+    assert round_time(SIZES, fed, t_c, WAN) == pytest.approx(expect, rel=1e-12)
+
+
+def test_wan_constants_are_the_papers():
+    assert WAN.dev_up == 14 * MBIT and WAN.dev_down == 110 * MBIT
+    assert WAN.bb_up == 74 * MBIT and WAN.bb_down == 204 * MBIT
+
+
+def test_time_to_step_scales_rounds_and_adds_upfront():
+    fed = FederationConfig(local_interval=2, global_interval=4)
+    rt = round_time(SIZES, fed, 0.05)
+    assert time_to_step(SIZES, fed, 0.05, steps=12) == pytest.approx(3 * rt)
+    # partial rounds pro-rate
+    assert time_to_step(SIZES, fed, 0.05, steps=6) == pytest.approx(1.5 * rt)
+    with_raw = dataclasses.replace(SIZES, raw_upfront=7.4e6)
+    t = time_to_step(with_raw, fed, 0.05, steps=12)
+    assert t == pytest.approx(3 * round_time(with_raw, fed, 0.05) + 7.4e6 / WAN.bb_up)
+    assert time_to_step(with_raw, fed, 0.05, steps=12,
+                        include_upfront=False) == pytest.approx(3 * rt)
+
+
+def test_round_time_monotone_in_every_message_component():
+    """Growing any single wire component can only slow the round down."""
+    rng = np.random.RandomState(0)
+    fed = FederationConfig(local_interval=2, global_interval=8)
+    for _ in range(25):
+        base = MessageSizes(*(float(x) for x in rng.uniform(1e3, 1e6, 5)),
+                            n_active=int(rng.randint(1, 16)))
+        t0 = round_time(base, fed, 0.05)
+        for comp in ("theta0", "theta1", "theta2", "z1", "z2"):
+            grown = dataclasses.replace(
+                base, **{comp: getattr(base, comp) * rng.uniform(1.5, 4.0)})
+            assert round_time(grown, fed, 0.05) > t0, comp
+
+
+def test_round_time_decreasing_in_q_at_fixed_p():
+    """Fewer exchange intervals (larger Q at fixed P) is never slower, and
+    strictly faster whenever the exchange message is non-empty."""
+    fed_p = 16
+    for t_c in (0.0, 0.05):
+        times = [round_time(SIZES, FederationConfig(local_interval=q,
+                                                    global_interval=fed_p), t_c)
+                 for q in (1, 2, 4, 8, 16)]
+        assert all(a > b for a, b in zip(times, times[1:]))
+
+
+def test_hetero_tails_reduce_to_paper_model_and_only_slow_down():
+    fed = FederationConfig(local_interval=2, global_interval=8)
+    sym = round_time(SIZES, fed, 0.05)
+    assert round_time_hetero(SIZES, fed, 0.05) == pytest.approx(sym)
+    rng = np.random.RandomState(1)
+    for _ in range(10):
+        dt, ct = 1.0 + rng.rand() * 5, 1.0 + rng.rand() * 5
+        slow = round_time_hetero(SIZES, fed, 0.05, dev_tail=dt, compute_tail=ct)
+        assert slow > sym
+        # backbone legs are NOT device-gated: the slowdown is bounded by the
+        # fully-scaled model (every term × max tail)
+        assert slow < max(dt, ct) * sym + 1e-9
+
+
+def test_hetero_tails_scale_only_their_terms():
+    """dev_tail scales the Λ device legs, compute_tail the P·t_c term —
+    verified by finite differencing each knob."""
+    fed = FederationConfig(local_interval=2, global_interval=8)
+    base = round_time_hetero(SIZES, fed, 0.05)
+    d_dev = round_time_hetero(SIZES, fed, 0.05, dev_tail=2.0) - base
+    d_cmp = round_time_hetero(SIZES, fed, 0.05, compute_tail=2.0) - base
+    lam = fed.lam
+    t_l = SIZES.theta2 / WAN.dev_up + SIZES.theta2 / WAN.dev_down
+    t_e_dev = (SIZES.z2 / SIZES.n_active) / WAN.dev_up \
+        + (SIZES.theta0 + SIZES.z1) / WAN.dev_down
+    assert d_dev == pytest.approx(lam * (t_l + t_e_dev), rel=1e-9)
+    assert d_cmp == pytest.approx(fed.global_interval * 0.05, rel=1e-9)

@@ -26,7 +26,10 @@ def test_checkpoint_roundtrip(tmp_path):
     loaded, step, extra = load_checkpoint(str(tmp_path / "ck"))
     assert step == 7 and extra["note"] == "x"
     np.testing.assert_array_equal(loaded["a"]["w"], np.arange(6.0).reshape(2, 3))
-    np.testing.assert_array_equal(loaded["b"]["__seq0"], np.ones((4,)))
+    # sequences come back as the SAME container type, not __seq{i} dicts
+    assert isinstance(loaded["b"], tuple) and len(loaded["b"]) == 2
+    np.testing.assert_array_equal(loaded["b"][0], np.ones((4,)))
+    np.testing.assert_array_equal(loaded["b"][1], np.zeros((2, 2)))
 
 
 def test_registry_has_all_assigned():

@@ -1,0 +1,398 @@
+"""Population layer: seeded traces, cohort sampling, semi-async scheduling,
+the wall-clock governor, and the checkpoint/partition fixes that make long
+population runs trustworthy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.comm_model import MessageSizes
+from repro.core.controller import AdaptiveConfig, ControllerCore, plan_round
+from repro.core.hsgd import HSGDState, init_state, resize_cohort
+from repro.core.population import (
+    DeviceRegistry,
+    PopulationConfig,
+    PopulationScheduler,
+    cohort_durations,
+    make_time_of,
+    run_population,
+)
+from repro.data.partition import hybrid_partition, sample_minibatch
+from repro.data.synthetic import ORGANAMNIST, make_dataset
+from repro.models.split_model import cnn_hybrid
+
+
+def _mini(M=3, K=16, q=1, p=2):
+    fed = FederationConfig(num_groups=M, devices_per_group=K, alpha=0.5,
+                           local_interval=q, global_interval=p)
+    X, y = make_dataset(ORGANAMNIST, M * K, seed=0)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    model = cnn_hybrid(h_rows=11)
+    return model, fed, data
+
+
+def _np_data(M=3, K=16):
+    _, _, data = _mini(M=M, K=K)
+    return {k: np.asarray(v) for k, v in data.items()}
+
+
+POP = PopulationConfig(seed=7, devices_per_group=24, target_cohort=4,
+                       period=100.0)
+
+
+# ---------------------------------------------------------------------------
+# Determinism (satellite): one seed -> one trace + one participant schedule
+# ---------------------------------------------------------------------------
+
+
+def test_trace_and_cohort_schedule_deterministic_from_seed():
+    data = _np_data()
+    a, b = DeviceRegistry(data, POP), DeviceRegistry(data, POP)
+    for name in ("lat_mult", "comp_mult", "duty", "phase", "data_row"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name))
+    now = 0.0
+    for r in range(5):
+        ca, cb = a.sample_cohort(r, now), b.sample_cohort(r, now)
+        np.testing.assert_array_equal(ca.idx, cb.idx)
+        np.testing.assert_array_equal(ca.pmask, cb.pmask)
+        np.testing.assert_array_equal(ca.dev_tail, cb.dev_tail)
+        now += 13.7
+    other = DeviceRegistry(data, PopulationConfig(seed=8, devices_per_group=24,
+                                                  target_cohort=4, period=100.0))
+    assert not np.array_equal(other.lat_mult, a.lat_mult)
+
+
+def test_full_population_run_reproducible_from_seed():
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    r1 = run_population(model, fed, train, data, POP, rounds=3)
+    r2 = run_population(model, fed, train, data, POP, rounds=3)
+    np.testing.assert_array_equal(r1["losses"], r2["losses"])
+    np.testing.assert_array_equal(r1["times"], r2["times"])
+    assert r1["staleness_hist"] == r2["staleness_hist"]
+
+
+# ---------------------------------------------------------------------------
+# Cohort sampling: pow2 buckets, padding, masks, tails
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_pads_to_pow2_with_real_members_and_valid_rows():
+    data = _np_data()
+    cfg = PopulationConfig(seed=3, devices_per_group=16, target_cohort=5,
+                           period=100.0)
+    reg = DeviceRegistry(data, cfg)
+    valid = data["valid"]
+    for r in range(6):
+        c = reg.sample_cohort(r, r * 17.0)
+        M, A = c.idx.shape
+        assert A == 1 << (A.bit_length() - 1)  # a power of two
+        assert A >= max(1, c.counts.max())
+        for m in range(M):
+            n = int(c.counts[m])
+            assert c.pmask[m].sum() == n
+            if n:
+                real = set(c.idx[m, :n].tolist())
+                # padding repeats the round's REAL members only
+                assert set(c.idx[m].tolist()) == real
+                assert all(valid[m, i] for i in real)
+                assert c.dev_tail[m] >= 1.0 and c.comp_tail[m] >= 1.0
+
+
+def test_availability_windows_gate_sampling():
+    data = _np_data()
+    cfg = PopulationConfig(seed=5, devices_per_group=12, target_cohort=6,
+                           duty_min=0.3, duty_max=0.6, period=50.0)
+    reg = DeviceRegistry(data, cfg)
+    c = reg.sample_cohort(0, 21.0)
+    avail = reg.available(21.0)
+    # every sampled device was available: its data row belongs to an
+    # available device's row set
+    for m in range(reg.num_groups):
+        ok_rows = set(reg.data_row[m, avail[m]].tolist())
+        n = int(c.counts[m])
+        assert set(c.idx[m, :n].tolist()) <= ok_rows
+
+
+# ---------------------------------------------------------------------------
+# Masked eq. (1) + cohort-state plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_masked_local_aggregate_excludes_padding():
+    rng = np.random.RandomState(0)
+    x = rng.randn(2, 4, 3).astype(np.float32)
+    mask = np.array([[1, 1, 0, 0], [1, 1, 1, 1]], np.float32)
+    out = F.local_aggregate({"w": jnp.asarray(x)}, jnp.asarray(mask))["w"]
+    np.testing.assert_allclose(np.asarray(out[0]), x[0, :2].mean(0), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), x[1].mean(0), rtol=1e-6)
+
+
+def test_masked_local_aggregate_empty_group_falls_back_to_plain_mean():
+    x = np.broadcast_to(np.arange(3, dtype=np.float32), (1, 4, 3)).copy()
+    mask = np.zeros((1, 4), np.float32)
+    out = F.local_aggregate({"w": jnp.asarray(x)}, jnp.asarray(mask))["w"]
+    np.testing.assert_allclose(np.asarray(out[0]), x[0].mean(0), rtol=1e-6)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_resize_cohort_exact_when_slots_uniform():
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    g_before = F.local_aggregate(state.theta2)
+    for A_new in (2, 8, 4):
+        state = resize_cohort(state, model, data, A_new)
+        leaves = jax.tree_util.tree_leaves(state.theta2)
+        assert all(l.shape[1] == A_new for l in leaves)
+        g_after = F.local_aggregate(state.theta2)
+        for a, b in zip(jax.tree_util.tree_leaves(g_before),
+                        jax.tree_util.tree_leaves(g_after)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Executor-cache discipline (acceptance: one compile per cohort-size bucket)
+# ---------------------------------------------------------------------------
+
+
+def test_one_executor_per_cohort_bucket():
+    from repro.core.hsgd import HSGDRunner
+
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    # revisiting a bucket NEVER builds a new executor
+    runner = HSGDRunner(model, fed, train)
+    for A in (2, 4, 8, 4, 2, 8, 8, 2):
+        runner.cohort_round_fn(2, 1, A, collect_stats=False)
+    assert len(runner._round_cache) == 3
+    # end-to-end: a population run compiles one executor per bucket it visits
+    pop = PopulationConfig(seed=2, devices_per_group=16, target_cohort=6,
+                           duty_min=0.25, duty_max=0.9, period=7.0)
+    res = run_population(model, fed, train, data, pop, rounds=10)
+    buckets = {h["bucket"] for h in res["history"]}
+    assert len(res["runner"]._round_cache) == len(buckets)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: deadlines, staleness damping, weight semantics
+# ---------------------------------------------------------------------------
+
+
+def _sched(mode="semi_async", **kw):
+    data = _np_data(M=4)
+    cfg = PopulationConfig(seed=1, devices_per_group=8, target_cohort=3,
+                           **kw)
+    reg = DeviceRegistry(data, cfg)
+    return PopulationScheduler(reg, np.ones(4), mode=mode)
+
+
+def test_semi_async_deadline_is_quantile_and_sync_is_max():
+    dur = np.array([1.0, 2.0, 3.0, 10.0])
+    semi = _sched("semi_async", deadline_quantile=0.5)
+    sync = _sched("sync")
+    cohort = semi.next_cohort()._replace(counts=np.ones(4, np.int64))
+    _, rec_semi = semi.settle(cohort, dur)
+    _, rec_sync = sync.settle(cohort, dur)
+    assert rec_semi["deadline"] == pytest.approx(np.quantile(dur, 0.5))
+    assert rec_sync["deadline"] == 10.0
+    assert rec_semi["deadline"] < rec_sync["deadline"]
+    assert rec_semi["late"] > 0 and rec_sync["late"] == 0
+
+
+def test_staleness_damps_then_drops_late_groups():
+    s = _sched("semi_async", deadline_quantile=0.5, staleness_damping=0.5,
+               max_staleness=2)
+    cohort = s.next_cohort()._replace(counts=np.ones(4, np.int64))
+    dur = np.array([1.0, 1.0, 1.0, 50.0])  # group 3 always misses
+    w1, _ = s.settle(cohort, dur)
+    assert w1[3] == pytest.approx(0.5)      # one round stale -> damping^1
+    w2, _ = s.settle(cohort, dur)
+    assert w2[3] == pytest.approx(0.25)     # two rounds stale -> damping^2
+    w3, _ = s.settle(cohort, dur)
+    assert w3[3] == 0.0                     # past max_staleness -> dropped
+    assert (w3[:3] == 1.0).all()            # on-time groups at full weight
+    # an on-time round resets the counter
+    w4, _ = s.settle(cohort, np.ones(4))
+    assert w4[3] == 1.0 and (s.staleness == 0).all()
+
+
+def test_absent_groups_get_zero_weight_and_all_absent_falls_back():
+    s = _sched("semi_async")
+    cohort = s.next_cohort()._replace(counts=np.array([2, 0, 1, 0]))
+    w, rec = s.settle(cohort, np.ones(4))
+    assert w[1] == 0.0 and w[3] == 0.0 and w[0] > 0 and w[2] > 0
+    empty = cohort._replace(counts=np.zeros(4, np.int64))
+    w0, rec0 = s.settle(empty, np.zeros(4))
+    assert (w0 > 0).all()                   # never a 0/0 aggregation
+    assert rec0["deadline"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# CI smoke (satellite): semi-async >= sync progress per simulated wall-clock
+# ---------------------------------------------------------------------------
+
+
+def test_semi_async_progress_per_wall_clock_beats_sync():
+    """Same seeded trace, full duty (availability independent of the clock, so
+    both modes see the identical cohort/duration schedule): the semi-async
+    deadline is a quantile of the same durations sync takes the max of, hence
+    strictly less simulated time for the same number of SGD steps whenever any
+    round has duration spread — i.e. progress per wall-clock is >= sync's,
+    and training still converges."""
+    model, fed, data = _mini(M=2, K=16)
+    train = TrainConfig(learning_rate=0.05)
+    pop = PopulationConfig(seed=4, devices_per_group=16, target_cohort=4,
+                           duty_min=1.0, duty_max=1.0)
+    semi = run_population(model, fed, train, data, pop, rounds=4,
+                          mode="semi_async")
+    sync = run_population(model, fed, train, data, pop, rounds=4, mode="sync")
+    assert len(semi["losses"]) == len(sync["losses"])  # same step count
+    assert semi["sim_seconds"] < sync["sim_seconds"]
+    assert semi["losses"][-1] < semi["losses"][0]
+    assert sync["losses"][-1] < sync["losses"][0]
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock governor
+# ---------------------------------------------------------------------------
+
+
+PROBE = {"rho": 1.0, "delta": 1.0, "F0": 1.0, "grad_norm_sq": 1.0}
+
+
+def _sizes_of_const(k, b):
+    comp = 1.0 if (k or b) else 4.0
+    n = 250_000
+    return MessageSizes(theta0=n * comp, theta1=4e5, theta2=1e5,
+                        z1=n * comp / 5, z2=n * comp / 5, n_active=4)
+
+
+def test_plan_round_without_time_model_matches_legacy():
+    cfg = AdaptiveConfig(total_steps=64, byte_budget=1e9)
+    fed = FederationConfig(num_groups=4)
+    legacy = plan_round(PROBE, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const)
+    timed = plan_round(PROBE, 0, 0.0, 0, 0.01, cfg, fed, _sizes_of_const,
+                       time_of=None, seconds_spent=123.0)
+    assert legacy == timed
+    assert legacy.projected_seconds == 0.0
+
+
+def test_time_budget_ratchets_compression_and_grows_p():
+    fed = FederationConfig(num_groups=4)
+
+    def time_of(P, rung):
+        k, b = AdaptiveConfig().ladder[rung]
+        wire = 10.0 * (0.1 if (k or b) else 1.0)
+        return 5.0 + wire * P + 0.05 * P  # t_g=5 amortizes over P steps
+
+    loose = AdaptiveConfig(total_steps=64, time_budget=1e9)
+    tight = AdaptiveConfig(total_steps=64, time_budget=300.0)
+    p_loose = plan_round(PROBE, 0, 0.0, 0, 0.01, loose, fed, _sizes_of_const,
+                         time_of=time_of)
+    p_tight = plan_round(PROBE, 0, 0.0, 0, 0.01, tight, fed, _sizes_of_const,
+                         time_of=time_of)
+    assert p_loose.rung == 0
+    assert p_tight.rung > p_loose.rung or p_tight.P > p_loose.P
+    assert p_tight.projected_seconds < p_loose.projected_seconds
+    assert p_loose.projected_seconds == pytest.approx(
+        time_of(p_loose.P, 0) * (64 / p_loose.P))
+
+
+def test_controller_core_seconds_ledger():
+    fed = FederationConfig(num_groups=2)
+    cfg = AdaptiveConfig(total_steps=4, max_interval=1, init_probe=False)
+    time_of = lambda P, rung: 2.5 * P
+    core = ControllerCore(cfg, fed, _sizes_of_const, eta0=0.01,
+                          time_of=time_of)
+    stats = {"loss": np.array([1.0]), "gnorm2": np.array([1.0]),
+             "delta2": np.array([1.0]), "rho": np.array([0.0]),
+             "rho_ok": np.array([0.0])}
+    plan, _ = core.plan()
+    core.record(plan, stats, seconds=7.0)       # realized time wins
+    assert core.seconds_spent == 7.0
+    plan, _ = core.plan()
+    rec = core.record(plan, stats)              # falls back to the model
+    assert rec["round_seconds"] == pytest.approx(2.5 * plan.P)
+    assert core.seconds_spent == pytest.approx(7.0 + 2.5 * plan.P)
+    assert rec["seconds_total"] == core.seconds_spent
+
+
+def test_make_time_of_orders_rungs_and_amortizes_p():
+    data = _np_data()
+    reg = DeviceRegistry(data, POP)
+    ladder = AdaptiveConfig().ladder
+    time_of = make_time_of(_sizes_of_const, ladder, reg, t_compute=0.0)
+    # tighter rung -> smaller message -> faster round at fixed P
+    assert time_of(4, 1) < time_of(4, 0)
+    # per-STEP time falls as P grows (t_g amortizes; Λ grows with P at Q=...)
+    assert time_of(8, 0) / 8 < time_of(1, 0) / 1
+    # straggler tails only slow things down vs a tail-free (sigma=0) fleet
+    tailed = make_time_of(_sizes_of_const, ladder, reg, t_compute=0.05)
+    sym = make_time_of(_sizes_of_const, ladder,
+                       DeviceRegistry(data, PopulationConfig(
+                           seed=0, devices_per_group=24, target_cohort=4,
+                           lat_sigma=0.0, comp_sigma=0.0)),
+                       t_compute=0.05)
+    assert tailed(4, 0) > sym(4, 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# Bugfix satellites: checkpoint structure + valid-row minibatches
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_restores_hsgd_state_and_ledger(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(1), model, fed, data)
+    ledger = {
+        "bytes_spent": np.float64(123.5),
+        "staleness": np.arange(3, dtype=np.int64),
+        "probe": (np.float32(0.5), np.float32(2.0)),
+        "history": [np.arange(2.0), np.arange(3.0)],
+    }
+    save_checkpoint(str(tmp_path / "ck"), {"state": state, "ledger": ledger},
+                    step=11)
+    loaded, step, _ = load_checkpoint(str(tmp_path / "ck"))
+    assert step == 11
+    st = loaded["state"]
+    # the real class, not a dict of __seq keys or an anonymous lookalike
+    assert isinstance(st, HSGDState) and type(st) is HSGDState
+    assert isinstance(st.stale, dict) and isinstance(loaded["ledger"]["probe"], tuple)
+    assert isinstance(loaded["ledger"]["history"], list)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(st)):
+        a = np.asarray(a)
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(loaded["ledger"]["staleness"],
+                                  ledger["staleness"])
+
+
+def test_sample_minibatch_never_returns_padded_rows():
+    # heavily padded group: 3 valid rows out of K=16
+    data = {k: v.copy() for k, v in _np_data(M=2, K=16).items()}
+    data["valid"][1, 3:] = False
+    rng = np.random.RandomState(0)
+    for batch in (2, 3, 8):  # below, at, and above the valid count
+        mb = sample_minibatch(data, batch, rng)
+        assert mb["valid"].all(), f"padded row sampled at batch={batch}"
+        assert (mb["idx"][1] < 3).all()
+        if batch <= 3:
+            assert len(set(mb["idx"][1].tolist())) == batch  # no replacement
+
+
+def test_cohort_durations_shape_and_tail_monotonicity():
+    data = _np_data()
+    reg = DeviceRegistry(data, POP)
+    c = reg.sample_cohort(0, 0.0)
+    sizes = _sizes_of_const(0.0, 0)
+    dur = cohort_durations(c, sizes, P=2, Q=1, t_compute=0.05)
+    assert dur.shape == (reg.num_groups,) and (dur > 0).all()
+    # a cohort with larger tails can only be slower
+    slower = c._replace(dev_tail=c.dev_tail * 2, comp_tail=c.comp_tail * 2)
+    assert (cohort_durations(slower, sizes, 2, 1, 0.05) > dur).all()

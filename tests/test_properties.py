@@ -401,3 +401,57 @@ def test_plan_projection_equals_booked_bytes_under_fixed_probes(
     assert _math.isclose(projections[0], booked, rel_tol=1e-9)
     for pr in projections[1:]:
         assert _math.isclose(pr, booked, rel_tol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# §VII-A3 round-time model (hypothesis twins of test_comm_model.py's sweeps)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 4), st.floats(1.5, 8.0),
+       st.tuples(*[st.floats(1e3, 1e6) for _ in range(5)]),
+       st.integers(1, 16))
+@settings(**SETTINGS)
+def test_round_time_monotone_in_message_components(comp_i, factor, comps, n_active):
+    """Round time is monotone in EVERY message component."""
+    import dataclasses
+
+    from repro.core.comm_model import MessageSizes, round_time
+
+    base = MessageSizes(*comps, n_active=n_active)
+    fed = FederationConfig(local_interval=2, global_interval=8)
+    name = ("theta0", "theta1", "theta2", "z1", "z2")[comp_i]
+    grown = dataclasses.replace(base, **{name: getattr(base, name) * factor})
+    assert round_time(grown, fed, 0.05) > round_time(base, fed, 0.05)
+
+
+@given(st.integers(0, 4), st.tuples(*[st.floats(1e3, 1e6) for _ in range(5)]),
+       st.floats(0.0, 0.2))
+@settings(**SETTINGS)
+def test_round_time_decreasing_in_q_at_fixed_p(log2_p, comps, t_c):
+    """At fixed P, a larger Q (fewer exchange intervals) is strictly faster."""
+    from repro.core.comm_model import MessageSizes, round_time
+
+    P = 16
+    sizes = MessageSizes(*comps, n_active=4)
+    qs = [1 << i for i in range(5)]  # divisors of 16
+    times = [round_time(sizes, FederationConfig(local_interval=q,
+                                                global_interval=P), t_c)
+             for q in qs]
+    assert all(a > b for a, b in zip(times, times[1:]))
+
+
+@given(st.floats(1.0, 8.0), st.floats(1.0, 8.0),
+       st.tuples(*[st.floats(1e3, 1e6) for _ in range(5)]))
+@settings(**SETTINGS)
+def test_round_time_hetero_bracketed_by_tails(dev_tail, compute_tail, comps):
+    """Straggler tails only slow a round down, by at most the max tail —
+    backbone legs are not device-gated, so full-scaling is an upper bound."""
+    from repro.core.comm_model import MessageSizes, round_time, round_time_hetero
+
+    sizes = MessageSizes(*comps, n_active=4)
+    fed = FederationConfig(local_interval=2, global_interval=8)
+    sym = round_time(sizes, fed, 0.05)
+    het = round_time_hetero(sizes, fed, 0.05,
+                            dev_tail=dev_tail, compute_tail=compute_tail)
+    assert sym <= het <= max(dev_tail, compute_tail) * sym + 1e-9
