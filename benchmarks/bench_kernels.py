@@ -14,7 +14,7 @@ from repro.kernels import ops, ref
 
 
 def timeit(fn, *args, iters=3):
-    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))  # compile + drain: keep warmup out of t0
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)

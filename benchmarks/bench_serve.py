@@ -49,6 +49,7 @@ def _best(fn, reps):
     for _ in range(reps):
         t0 = time.perf_counter()
         out = fn()
+        jax.block_until_ready(out)  # async dispatch: time execution, not enqueue
         best = min(best, time.perf_counter() - t0)
     return best, out
 
@@ -89,7 +90,7 @@ def bench_engine(cfg, params, prompts, extra, gen, cache_dtype, decode_block, re
     for _ in range(reps):
         t0 = time.perf_counter()
         toks, rep = engine.generate(list(prompts), gen, extra_embeds=extra)
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0  # reprolint: disable=RP6 — generate() returns host tokens, synced internally
         if wall < best:  # every reported metric comes from the SAME best rep
             best, best_rep = wall, rep
             prefill_s = max(r["prefill_s"] for r in rep["requests"])

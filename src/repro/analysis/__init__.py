@@ -1,0 +1,34 @@
+"""reprolint: static JIT-discipline analysis + runtime compile budgets.
+
+Every performance claim in this repo rests on invariants the compiler does
+not check: one XLA compile per executor bucket, donation-safe state
+threading, traced-η never recompiling, single-seed determinism, honest
+benchmark timing. ``reprolint`` proves the lexically-checkable half of
+those invariants at review time (see ``rules.py`` for the catalogue, one
+rule per historical bug class), and ``compile_guard`` asserts the runtime
+half — exact compile counts per named executor — uniformly across tests.
+
+Usage:
+
+  python -m repro.analysis src benchmarks examples        # lint, human output
+  python -m repro.analysis --check --json src             # CI: fail on findings
+  python -m repro.analysis --write-baseline src ...       # accept current findings
+
+  from repro.analysis import compile_guard
+  with compile_guard(track=r"hsgd_round") as g:
+      runner.round_fn(4, 2)(state, data, w, 0.05)
+  assert g.total == 1
+"""
+from repro.analysis.compile_guard import CompileBudgetError, CompileGuard, compile_guard
+from repro.analysis.linter import Finding, lint_paths, lint_source
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "CompileBudgetError",
+    "CompileGuard",
+    "compile_guard",
+    "Finding",
+    "lint_paths",
+    "lint_source",
+    "RULES",
+]

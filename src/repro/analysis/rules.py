@@ -1,0 +1,647 @@
+"""The reprolint rule catalogue — one rule per bug class this repo has
+actually shipped (or nearly shipped). Each rule is a pure function over a
+parsed module (``FileContext``) yielding ``Finding``s; the registry maps
+rule ids to checkers so the linter, the CLI ``--list-rules`` output, and the
+fixture tests all read from one place.
+
+Rules (see README.md for the war stories):
+
+  RP1  jit-in-loop            — ``jax.jit``/``pjit`` evaluated per iteration
+  RP2  use-after-donate       — a name read after a donating executor ate it
+  RP3  loop-varying-capture   — jitted closure over a loop-rebound Python value
+  RP4  host-sync-in-compiled  — ``.item()``/``np.asarray``/... in jit, scan
+                                bodies, or engine ``step()`` paths
+  RP5  unseeded-rng           — global ``np.random.*`` state / bare
+                                ``default_rng()`` outside data/ fixtures
+  RP6  unsynced-benchmark-timer — ``time.time()`` spans async device work with
+                                no ``block_until_ready``/``device_get``
+  RP7  mutable-default        — mutable arg defaults; array-valued dataclass
+                                field defaults
+  RP8  unregistered-state     — ``*State`` NamedTuple never passed to
+                                ``checkpoint.register_state_class``
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
+
+# ---------------------------------------------------------------------------
+# Finding + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    source: str = ""  # stripped source line (baseline fingerprinting)
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    check: Callable[["FileContext"], Iterator[Finding]]
+    doc: str = ""
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, title: str):
+    def register(fn):
+        RULES[rule_id] = Rule(rule_id, title, fn, doc=(fn.__doc__ or "").strip())
+        return fn
+
+    return register
+
+
+# ---------------------------------------------------------------------------
+# Parsed-module context shared by every rule
+# ---------------------------------------------------------------------------
+
+_JIT_NAMES = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+_SCAN_HOFS = {
+    "jax.lax.scan": (0,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.switch": None,  # every arg past the index may be a branch
+    "jax.lax.map": (0,),
+}
+_HOST_SYNC_CALLS = {"jax.device_get", "numpy.asarray", "numpy.array"}
+_NP_GLOBAL_DISTS = {
+    "rand", "randn", "randint", "random", "random_sample", "normal",
+    "uniform", "choice", "permutation", "shuffle", "exponential", "poisson",
+    "binomial", "beta", "gamma", "standard_normal", "sample",
+}
+_TIMER_CALLS = {"time.time", "time.perf_counter", "time.monotonic"}
+_SYNC_EVIDENCE = {"jax.device_get", "numpy.asarray", "numpy.array",
+                  "jax.block_until_ready"}
+
+
+class FileContext:
+    """One parsed file: tree + parent links + import-alias resolution."""
+
+    def __init__(self, path: str, source: str, tree: Optional[ast.Module] = None):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree if tree is not None else ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+        self.aliases = self._collect_aliases()
+
+    # -- imports ------------------------------------------------------------
+
+    def _collect_aliases(self) -> Dict[str, str]:
+        """local name -> canonical dotted prefix (``jnp`` -> ``jax.numpy``)."""
+        out: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    out[a.asname or a.name] = f"{node.module}.{a.name}"
+        self._imported = set(out.values())
+        # normalize the two ubiquitous shorthands even without imports
+        out.setdefault("np", "numpy")
+        out.setdefault("jnp", "jax.numpy")
+        return out
+
+    def imports_jax(self) -> bool:
+        return any(v == "jax" or v.startswith("jax.") for v in self._imported)
+
+    # -- name resolution ----------------------------------------------------
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """``ast.Name``/``ast.Attribute`` chain -> dotted string, else None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+
+    def canonical(self, node: ast.AST) -> Optional[str]:
+        """Dotted name with the leading import alias expanded."""
+        name = self.dotted(node)
+        if name is None:
+            return None
+        head, _, rest = name.partition(".")
+        full = self.aliases.get(head, head)
+        return f"{full}.{rest}" if rest else full
+
+    def call_canonical(self, call: ast.Call) -> Optional[str]:
+        return self.canonical(call.func)
+
+    # -- structure helpers ---------------------------------------------------
+
+    def source_line(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule_id, self.path, node.lineno, node.col_offset,
+                       message, self.source_line(node.lineno))
+
+    def is_jit_expr(self, node: ast.AST) -> bool:
+        """``jax.jit``/``pjit`` reference, a call to one, or a
+        ``partial(jax.jit, ...)`` wrapper (decorator or value position)."""
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            return self.canonical(node) in _JIT_NAMES
+        if isinstance(node, ast.Call):
+            fn = self.call_canonical(node)
+            if fn in _JIT_NAMES:
+                return True
+            if fn in ("functools.partial", "partial") and node.args:
+                return self.is_jit_expr(node.args[0])
+        return False
+
+    def jit_decorated(self, fn: ast.AST) -> bool:
+        return isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) and any(
+            self.is_jit_expr(d) for d in fn.decorator_list)
+
+    def donate_positions(self, node: ast.AST) -> Optional[Tuple[int, ...]]:
+        """Positions named by ``donate_argnums`` if ``node`` is a jit/partial
+        expression carrying one; None otherwise."""
+        if not isinstance(node, ast.Call):
+            return None
+        fn = self.call_canonical(node)
+        if fn in ("functools.partial", "partial") and node.args:
+            if not self.is_jit_expr(node.args[0]):
+                return None
+        elif fn not in _JIT_NAMES:
+            return None
+        for kw in node.keywords:
+            if kw.arg == "donate_argnums":
+                try:
+                    v = ast.literal_eval(kw.value)
+                except (ValueError, SyntaxError):
+                    return None
+                return tuple(v) if isinstance(v, (tuple, list)) else (int(v),)
+        return None
+
+    def enclosing(self, node: ast.AST, kinds) -> Optional[ast.AST]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, kinds):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+    def executes_inside_loop(self, node: ast.AST) -> bool:
+        """True when ``node`` is evaluated per iteration of a lexical loop:
+        there is a For/While between it and its nearest enclosing function
+        body. Decorator expressions belong to the ENCLOSING scope, so a
+        decorated def inside a loop still counts."""
+        cur, prev = self.parents.get(node), node
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                in_decorators = not isinstance(cur, ast.Lambda) and any(
+                    prev is d or _contains(d, prev) for d in cur.decorator_list)
+                if not in_decorators:
+                    return False  # inner scope: not evaluated at loop time
+            prev, cur = cur, self.parents.get(cur)
+        return False
+
+
+def _contains(root: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(root))
+
+
+def _assigned_names(target: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store, ast.Del)):
+            out.add(n.id)
+    return out
+
+
+def _scope_functions(ctx: FileContext):
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# RP1 — jit evaluated inside a loop
+# ---------------------------------------------------------------------------
+
+
+@rule("RP1", "jax.jit/pjit evaluated inside a loop")
+def check_jit_in_loop(ctx: FileContext) -> Iterator[Finding]:
+    """Each evaluation of ``jax.jit`` builds a FRESH compile cache: calling
+    it per round/iteration recompiles every time and silently destroys the
+    one-executor-per-bucket discipline. Hoist the jit (or use a cached
+    executor factory like ``HSGDRunner.round_fn``)."""
+    for node in ast.walk(ctx.tree):
+        is_jit_call = isinstance(node, ast.Call) and ctx.is_jit_expr(node)
+        is_jit_deco = (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                       and ctx.jit_decorated(node))
+        if not (is_jit_call or is_jit_deco):
+            continue
+        probe = node.decorator_list[0] if is_jit_deco else node
+        if ctx.executes_inside_loop(probe):
+            yield ctx.finding(
+                "RP1", node,
+                "jax.jit evaluated per loop iteration — a fresh compile "
+                "cache every pass; hoist it or cache the executor per bucket")
+
+
+# ---------------------------------------------------------------------------
+# RP2 — use after donation
+# ---------------------------------------------------------------------------
+
+
+def _donating_names(ctx: FileContext, scope: ast.AST) -> Dict[str, Tuple[int, ...]]:
+    """Names bound (in ``scope``'s immediate statements) to donating jitted
+    callables: ``f = jax.jit(g, donate_argnums=...)`` assignments and
+    ``@partial(jax.jit, donate_argnums=...)`` decorated defs."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    body = scope.body if hasattr(scope, "body") else []
+    for stmt in body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            pos = ctx.donate_positions(stmt.value)
+            if pos is not None and isinstance(stmt.targets[0], ast.Name):
+                out[stmt.targets[0].id] = pos
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for d in stmt.decorator_list:
+                pos = ctx.donate_positions(d)
+                if pos is not None:
+                    out[stmt.name] = pos
+    return out
+
+
+@rule("RP2", "value used after being donated to a jitted executor")
+def check_use_after_donate(ctx: FileContext) -> Iterator[Finding]:
+    """``donate_argnums`` hands the buffer to XLA: the Python name still
+    points at a deleted array, and touching it raises (or worse, on some
+    backends, reads freed memory). Rebind the name from the executor's
+    return value — every runner in this repo threads state that way."""
+    for fn in list(_scope_functions(ctx)) + [ctx.tree]:
+        donating = _donating_names(ctx, fn)
+        if not donating:
+            continue
+        # (line, order, kind, name) — within one line, loads happen first
+        # (call args), then the donation consumes, then the assignment of
+        # the return value rebinds: `state, l = fn(state, ...)` is safe.
+        events: List[Tuple[int, int, str, str]] = []
+        body = fn.body if hasattr(fn, "body") else []
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                    events.append((node.lineno, 0, "load", node.id))
+                elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                    events.append((node.lineno, 2, "rebind", node.id))
+                if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                    pos = donating.get(node.func.id)
+                    if pos is None:
+                        continue
+                    for p in pos:
+                        if p < len(node.args) and isinstance(node.args[p], ast.Name):
+                            events.append((node.lineno, 1, "consume",
+                                           node.args[p].id))
+        consumed: Dict[str, int] = {}
+        for line, _, kind, name in sorted(events):
+            if kind == "load" and name in consumed:
+                if line > consumed[name]:
+                    src = ctx.source_line(line)
+                    yield Finding(
+                        "RP2", ctx.path, line, 0,
+                        f"'{name}' was donated to a jitted executor on line "
+                        f"{consumed[name]} and is read again — the buffer is "
+                        f"gone; rebind it from the executor's return value",
+                        src)
+                    del consumed[name]  # one report per donation
+            elif kind == "rebind":
+                consumed.pop(name, None)
+            elif kind == "consume":
+                consumed[name] = line
+
+
+# ---------------------------------------------------------------------------
+# RP3 — jitted closure over a loop-varying Python value
+# ---------------------------------------------------------------------------
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Parameters + names assigned anywhere in ``fn`` (its own scope)."""
+    names: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        names.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                names.add(node.name)
+    return names
+
+
+@rule("RP3", "jitted closure captures a loop-varying Python scalar")
+def check_loop_varying_capture(ctx: FileContext) -> Iterator[Finding]:
+    """A Python value captured by closure is baked into the trace as a
+    constant: when the enclosing loop rebinds it each iteration, the jitted
+    function either recompiles every pass or (if the jit object survived the
+    loop) silently keeps the stale first value. This is the traced-η bug
+    class — η must ride through as a traced ARGUMENT, never a capture."""
+    for outer in _scope_functions(ctx):
+        loop_rebound: Set[str] = set()
+        for node in ast.walk(outer):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                loop_rebound |= _assigned_names(node.target)
+            if isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+                for sub in node.body + getattr(node, "orelse", []):
+                    for n in ast.walk(sub):
+                        if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                            tgt = n.targets if isinstance(n, ast.Assign) else [n.target]
+                            for t in tgt:
+                                loop_rebound |= _assigned_names(t)
+        if not loop_rebound:
+            continue
+        for inner in ast.walk(outer):
+            if not isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if inner is outer or not ctx.jit_decorated(inner):
+                continue
+            local = _local_bindings(inner)
+            for node in ast.walk(inner):
+                if (isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load)
+                        and node.id in loop_rebound and node.id not in local):
+                    yield ctx.finding(
+                        "RP3", inner,
+                        f"jitted '{inner.name}' closes over '{node.id}', which "
+                        f"the enclosing loop rebinds — recompile (or stale "
+                        f"constant) every iteration; pass it as a traced "
+                        f"argument instead")
+                    break  # one finding per jitted def
+
+
+# ---------------------------------------------------------------------------
+# RP4 — host sync inside compiled bodies / engine step paths
+# ---------------------------------------------------------------------------
+
+
+def _compiled_bodies(ctx: FileContext) -> List[Tuple[ast.AST, bool]]:
+    """(body, is_traced) pairs worth auditing for host syncs: traced bodies
+    (jit-decorated; passed to lax control-flow HOFs) and the host-side
+    serving hot path — class ``step()`` methods plus the same-class helpers
+    they call (one level: ``self._decode_block_run()`` style)."""
+    out: List[Tuple[ast.AST, bool]] = []
+    seen: Set[int] = set()
+
+    def add(body: ast.AST, traced: bool) -> None:
+        if id(body) not in seen:
+            seen.add(id(body))
+            out.append((body, traced))
+
+    local_defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            local_defs[node.name] = node
+            if ctx.jit_decorated(node):
+                add(node, True)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = ctx.call_canonical(node)
+        if fn not in _SCAN_HOFS:
+            continue
+        positions = _SCAN_HOFS[fn]
+        args = (node.args if positions is None
+                else [node.args[p] for p in positions if p < len(node.args)])
+        for a in args:
+            if isinstance(a, ast.Lambda):
+                add(a, True)
+            elif isinstance(a, ast.Name) and a.id in local_defs:
+                add(local_defs[a.id], True)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        methods = {m.name: m for m in node.body
+                   if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        step = methods.get("step")
+        if step is None or ctx.jit_decorated(step):
+            continue
+        add(step, False)
+        for sub in ast.walk(step):
+            if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)
+                    and isinstance(sub.func.value, ast.Name)
+                    and sub.func.value.id == "self"
+                    and sub.func.attr in methods):
+                add(methods[sub.func.attr], False)
+    return out
+
+
+@rule("RP4", "host synchronization inside a compiled body or step() path")
+def check_host_sync(ctx: FileContext) -> Iterator[Finding]:
+    """``.item()``/``float()``/``np.asarray()`` on a traced value either
+    aborts tracing (ConcretizationTypeError) or, on the host side of an
+    engine ``step()``, stalls the dispatch pipeline once per token instead
+    of once per block. Keep device values on device; sync once per block
+    at a documented point."""
+    sync_msg = {
+        "item": ".item() forces a device->host sync",
+        "tolist": ".tolist() forces a device->host sync",
+    }
+    for body_fn, inside_jit in _compiled_bodies(ctx):
+        for node in ast.walk(body_fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if isinstance(node.func, ast.Attribute) and node.func.attr in sync_msg \
+                    and not node.args:
+                yield ctx.finding("RP4", node, sync_msg[node.func.attr]
+                                  + " inside a compiled/hot body")
+                continue
+            fn = ctx.call_canonical(node)
+            if fn in _HOST_SYNC_CALLS:
+                yield ctx.finding(
+                    "RP4", node,
+                    f"{fn}() materializes the operand on host inside a "
+                    f"compiled/hot body — sync once per block, outside")
+            elif inside_jit and fn in ("float", "int") and node.args and not \
+                    isinstance(node.args[0], ast.Constant):
+                yield ctx.finding(
+                    "RP4", node,
+                    f"{fn}() on a traced value concretizes it — aborts "
+                    f"tracing or bakes in a stale constant")
+
+
+# ---------------------------------------------------------------------------
+# RP5 — unseeded / global-state RNG
+# ---------------------------------------------------------------------------
+
+
+@rule("RP5", "unseeded or global-state numpy RNG")
+def check_unseeded_rng(ctx: FileContext) -> Iterator[Finding]:
+    """Every trace, cohort, and benchmark in this repo reproduces from ONE
+    seed; a module-level ``np.random.*`` draw or a bare ``default_rng()``
+    injects hidden global state that breaks replay (and the paper-parity
+    claims with it). Thread an explicit seeded Generator/RandomState."""
+    if "data" in ctx.path.replace("\\", "/").split("/"):
+        return  # data fixtures own their seeding policy
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = ctx.call_canonical(node)
+        if fn is None:
+            continue
+        if fn == "numpy.random.seed":
+            yield ctx.finding("RP5", node,
+                              "np.random.seed mutates GLOBAL RNG state — "
+                              "pass an explicit Generator/RandomState")
+        elif fn.startswith("numpy.random.") and fn.split(".")[-1] in _NP_GLOBAL_DISTS:
+            yield ctx.finding(
+                "RP5", node,
+                f"{fn} draws from the global numpy RNG — unseeded and "
+                f"order-dependent; use np.random.default_rng(seed)")
+        elif fn in ("numpy.random.default_rng", "numpy.random.RandomState") \
+                and not node.args and not node.keywords:
+            yield ctx.finding(
+                "RP5", node,
+                f"bare {fn}() seeds from the OS — every run differs; "
+                f"derive the seed from the experiment config")
+
+
+# ---------------------------------------------------------------------------
+# RP6 — benchmark timing without a device sync
+# ---------------------------------------------------------------------------
+
+
+@rule("RP6", "benchmark timer spans async device work without a sync")
+def check_unsynced_timer(ctx: FileContext) -> Iterator[Finding]:
+    """JAX dispatch is async: ``time.time()`` around un-synced device calls
+    measures enqueue latency, not execution. Every timed region in
+    ``benchmarks/`` must force completion (``jax.block_until_ready``,
+    ``device_get``, or a host materialization) before the second timestamp."""
+    if "benchmarks" not in ctx.path.replace("\\", "/").split("/"):
+        return
+    if not ctx.imports_jax():
+        return
+    for fn in _scope_functions(ctx):
+        timers: List[ast.Call] = []
+        synced = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = ctx.call_canonical(node)
+            if name in _TIMER_CALLS:
+                timers.append(node)
+            elif name in _SYNC_EVIDENCE or (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("block_until_ready", "device_get")):
+                synced = True
+        if len(timers) >= 2 and not synced:
+            yield ctx.finding(
+                "RP6", timers[-1],
+                "timed region has no block_until_ready/device_get — with "
+                "async dispatch this measures enqueue, not execution")
+
+
+# ---------------------------------------------------------------------------
+# RP7 — mutable defaults
+# ---------------------------------------------------------------------------
+
+
+_ARRAY_FACTORY_PREFIXES = ("jax.numpy.", "numpy.")
+
+
+@rule("RP7", "mutable default argument / array dataclass default")
+def check_mutable_default(ctx: FileContext) -> Iterator[Finding]:
+    """A mutable default is one object shared by every call; an array-valued
+    dataclass default is one buffer shared by every instance (and it makes
+    the config unhashable, which silently breaks executor-cache keys).
+    Use ``None`` + construct inside, or ``field(default_factory=...)``."""
+    for fn in _scope_functions(ctx):
+        for default in list(fn.args.defaults) + [
+                d for d in fn.args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                yield ctx.finding(
+                    "RP7", default,
+                    f"mutable default in '{fn.name}' — one shared object "
+                    f"across all calls; use None and construct inside")
+            elif isinstance(default, ast.Call):
+                name = ctx.call_canonical(default)
+                if name in ("list", "dict", "set") or (
+                        name and name.startswith(_ARRAY_FACTORY_PREFIXES)
+                        and not name.endswith((".float32", ".float64", ".int32",
+                                               ".int64", ".bfloat16"))):
+                    yield ctx.finding(
+                        "RP7", default,
+                        f"call-valued default in '{fn.name}' evaluates ONCE "
+                        f"at def time and is shared; use None or "
+                        f"field(default_factory=...)")
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        is_dc = any(ctx.canonical(d if not isinstance(d, ast.Call) else d.func)
+                    in ("dataclasses.dataclass", "dataclass")
+                    for d in node.decorator_list)
+        if not is_dc:
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.value, ast.Call):
+                name = ctx.call_canonical(stmt.value)
+                if name and name.startswith(_ARRAY_FACTORY_PREFIXES):
+                    yield ctx.finding(
+                        "RP7", stmt,
+                        f"dataclass field default '{name}' is one array "
+                        f"shared by every instance (and unhashable); use "
+                        f"field(default_factory=...)")
+
+
+# ---------------------------------------------------------------------------
+# RP8 — state NamedTuple not registered for checkpoint restore
+# ---------------------------------------------------------------------------
+
+
+@rule("RP8", "*State NamedTuple not registered with register_state_class")
+def check_unregistered_state(ctx: FileContext) -> Iterator[Finding]:
+    """``checkpoint.load_checkpoint`` rebuilds containers from a structure
+    descriptor; a NamedTuple class that never called
+    ``register_state_class`` restores as an anonymous lookalike — code that
+    isinstance-checks or relies on methods breaks one restart later (the
+    ``__seq{i}`` checkpoint-loss bug class)."""
+    registered: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            fn = ctx.call_canonical(node) or ""
+            if fn.endswith("register_state_class") and node.args and \
+                    isinstance(node.args[0], ast.Name):
+                registered.add(node.args[0].id)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not node.name.endswith("State"):
+            continue
+        bases = {ctx.canonical(b) for b in node.bases}
+        if not ({"NamedTuple", "typing.NamedTuple"} & bases):
+            continue
+        decorated = any((ctx.canonical(d) or "").endswith("register_state_class")
+                        for d in node.decorator_list)
+        if node.name not in registered and not decorated:
+            yield ctx.finding(
+                "RP8", node,
+                f"'{node.name}' is a state NamedTuple but is never passed to "
+                f"checkpoint.register_state_class — a checkpoint restore "
+                f"returns an anonymous lookalike")

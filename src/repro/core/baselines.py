@@ -163,3 +163,9 @@ def make_runner(name: str, model: HybridModel, fed: FederationConfig, train: Tra
     if name == "centralized":
         return centralized_runner(model, fed, train)
     raise ValueError(f"unknown algorithm {name}")
+
+
+# checkpoint restores return a real JFLState, not an anonymous namedtuple
+from repro.checkpoint.ckpt import register_state_class as _register_state_class  # noqa: E402
+
+_register_state_class(JFLState)

@@ -469,12 +469,13 @@ class HSGDRunner:
         if fn is None:
             lam = P // Q
 
+            # named so compile_guard can attribute compiles per executor
             @partial(jax.jit, donate_argnums=(0,))
-            def fn(state, data, group_weights, lr):
+            def hsgd_round(state, data, group_weights, lr):
                 return self._round_impl(state, data, group_weights, lr,
                                         Q, lam, k, b, collect_stats)
 
-            self._round_cache[key] = fn
+            fn = self._round_cache[key] = hsgd_round
         return fn
 
     def cohort_round_fn(self, P: int, Q: int, cohort_size: int,
@@ -512,7 +513,7 @@ class HSGDRunner:
             A = cohort_size
 
             @partial(jax.jit, donate_argnums=(0,))
-            def fn(state, data, group_weights, lr, participants, pmask):
+            def hsgd_cohort_round(state, data, group_weights, lr, participants, pmask):
                 state, out = self._round_impl(
                     state, data, group_weights, lr, Q, lam, k, b,
                     collect_stats, idx=participants, pmask=pmask)
@@ -521,7 +522,7 @@ class HSGDRunner:
                     theta2=F.broadcast_to_devices(theta2_group, A))
                 return state, out
 
-            self._round_cache[key] = fn
+            fn = self._round_cache[key] = hsgd_cohort_round
         return fn
 
     def run(self, state: HSGDState, data, group_weights, rounds: int,

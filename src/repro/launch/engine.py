@@ -221,7 +221,7 @@ class ServeEngine:
                 # family has one, and samples the candidate first token on
                 # device — for pow2 prompts the whole prefill is ONE dispatch
                 @jax.jit
-                def fn(params, tokens, key, temperature, enc_embeds=None):
+                def serve_prefill_first(params, tokens, key, temperature, enc_embeds=None):
                     caches = T.init_decode_caches(cfg, Bp, cache_len, dtype)
                     if cfg.family == "audio":
                         caches = T.seed_audio_caches(cfg, params, caches, enc_embeds)
@@ -229,13 +229,17 @@ class ServeEngine:
                                                    jnp.int32(0), fresh_cache=True)
                     tok = sample_token(logits[:, -1], key, temperature)
                     return tok, caches
+
+                fn = serve_prefill_first
             else:
 
                 @partial(jax.jit, donate_argnums=(1,))
-                def fn(params, caches, tokens, index, key, temperature):
+                def serve_prefill(params, caches, tokens, index, key, temperature):
                     logits, caches = T.decode_step(cfg, params, tokens, caches, index)
                     tok = sample_token(logits[:, -1], key, temperature)
                     return tok, caches
+
+                fn = serve_prefill
 
             self._prefill_fns[key] = fn
         return fn
@@ -247,7 +251,7 @@ class ServeEngine:
             cfg = self.cfg
 
             @partial(jax.jit, donate_argnums=(1,))
-            def fn(params, caches, tok, pos, active, key, temperature):
+            def serve_decode(params, caches, tok, pos, active, key, temperature):
                 def step(carry, _):
                     caches, tok, pos, key = carry
                     # parked slots write at cache_len: out-of-range -> dropped
@@ -261,7 +265,7 @@ class ServeEngine:
                     step, (caches, tok, pos, key), None, length=block)
                 return caches, tok, pos, toks  # toks: [block, B]
 
-            self._decode_fns[key] = fn
+            fn = self._decode_fns[key] = serve_decode
         return fn
 
     def _insert_fn(self, Bp: int):
@@ -274,7 +278,7 @@ class ServeEngine:
             # prefill caches lands in decode slot dst[i]; prefill pad rows
             # carry dst == max_batch (out of range) and are dropped
             @partial(jax.jit, donate_argnums=(0,))
-            def fn(dec_caches, pre_caches, dst):
+            def serve_insert(dec_caches, pre_caches, dst):
                 def cp(d, p, ax):
                     d2 = jnp.moveaxis(d, ax, 0)
                     p2 = jnp.moveaxis(p, ax, 0)
@@ -283,7 +287,7 @@ class ServeEngine:
 
                 return jax.tree.map(cp, dec_caches, pre_caches, bx)
 
-            self._insert_fns[key] = fn
+            fn = self._insert_fns[key] = serve_insert
         return fn
 
     def _spec_fn(self, B: int, cache_len: int, block: int, gamma: int, dk: int):
@@ -300,7 +304,7 @@ class ServeEngine:
             # precede reads, so each stale column is overwritten before any
             # query can attend it.
             @partial(jax.jit, donate_argnums=(1,))
-            def fn(params, caches, tok, pos, active):
+            def serve_spec_decode(params, caches, tok, pos, active):
                 def spec_round(carry, _):
                     caches, tok, pos = carry
 
@@ -329,7 +333,7 @@ class ServeEngine:
                 # toks: [block, B, gamma+1]; n_emit: [block, B]
                 return caches, tok, pos, toks, n_emit
 
-            self._spec_fns[key] = fn
+            fn = self._spec_fns[key] = serve_spec_decode
         return fn
 
     def _harvest_fn(self, Bp: int, p: int, cache_len: int):
@@ -342,7 +346,7 @@ class ServeEngine:
             # revert to the init values (zeros; INT32_MAX position sentinel),
             # making the harvested rows a deterministic replay of the prefix
             @jax.jit
-            def fn(caches):
+            def serve_harvest(caches):
                 def mask(c, ax):
                     keep_shape = [1] * c.ndim
                     keep_shape[ax] = c.shape[ax]
@@ -352,7 +356,7 @@ class ServeEngine:
 
                 return jax.tree.map(mask, caches, seq_ax)
 
-            self._harvest_fns[key] = fn
+            fn = self._harvest_fns[key] = serve_harvest
         return fn
 
     def _cache_axis(self, B: int, cache_len: int, name: str):

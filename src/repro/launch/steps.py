@@ -568,13 +568,14 @@ class LLMRoundRunner:
         if fn is None:
             lam = P // Q
 
+            # named so compile_guard can attribute compiles per executor
             @functools.partial(jax.jit, donate_argnums=(0,))
-            def fn(params, batches, eta, pod_weights=None):
+            def llm_round(params, batches, eta, pod_weights=None):
                 return self._round_impl(params, batches, eta, Q, lam,
                                         compression_k, quant_levels,
                                         collect_stats, pod_weights)
 
-            self._round_cache[key] = fn
+            fn = self._round_cache[key] = llm_round
         return fn
 
     def run_fixed(self, params, batch_fn, steps: int, P: int, Q: int, lr: float,
@@ -654,8 +655,10 @@ class AdaptiveLLMRunner:
         apply here — the probe batch is whatever ``batch_fn`` samples."""
         from repro.core.controller import probe_from_stats
 
-        fn = jax.jit(lambda p, b, eta: self.runner._round_impl(
-            p, b, eta, 2, 1, 0.0, 0, True))
+        def llm_probe_round(p, b, eta):
+            return self.runner._round_impl(p, b, eta, 2, 1, 0.0, 0, True)
+
+        fn = jax.jit(llm_probe_round)
         _, stats = fn(params, batches, self.lr0)
         return probe_from_stats(jax.device_get(stats), Q=2)
 

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import compile_guard
 from repro.common.config import ModelConfig
 from repro.core import comm_model as CM
 from repro.core.compression import COMPRESSION_LADDER, compressed_bytes
@@ -227,8 +228,9 @@ def test_adaptive_llm_accounting_and_compile_bound(tiny_model):
                           eta_min=0.01, eta_max=0.05)
     ad = AdaptiveLLMRunner(tiny_model, acfg, n_pods=2, learning_rate=0.05)
     params = init_llm_params(jax.random.PRNGKey(0), tiny_model, n_pods=2)
-    params, losses, history = ad.run(
-        params, llm_batch_fn(cfg, 4, 8, n_pods=2, seed=0))
+    with compile_guard(track=r"llm_round") as g:
+        params, losses, history = ad.run(
+            params, llm_batch_fn(cfg, 4, 8, n_pods=2, seed=0))
 
     assert len(losses) == acfg.total_steps
     assert sum(h["P"] for h in history) == acfg.total_steps
@@ -238,9 +240,12 @@ def test_adaptive_llm_accounting_and_compile_bound(tiny_model):
     bytes_curve = [h["bytes_total"] for h in history]
     assert all(b > a for a, b in zip(bytes_curve, bytes_curve[1:]))
     assert np.isfinite(losses).all()
-    # ACCEPTANCE: at most one compiled executor per distinct (P, Q, k, b)
+    # ACCEPTANCE: at most one compiled executor per distinct (P, Q, k, b) —
+    # asserted on the ACTUAL XLA compile events, not just cache bookkeeping
     buckets = {(h["P"], h["Q"], h["compression_k"], h["quant_levels"])
                for h in history}
+    assert g.total <= len(buckets), g.by_name
+    assert g.total == len(ad.runner._round_cache)  # every executor: 1 compile
     assert len(ad.runner._round_cache) <= len(buckets)
 
 

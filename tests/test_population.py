@@ -159,20 +159,26 @@ def test_resize_cohort_exact_when_slots_uniform():
 
 
 def test_one_executor_per_cohort_bucket():
+    from repro.analysis import compile_guard
     from repro.core.hsgd import HSGDRunner
 
     model, fed, data = _mini()
     train = TrainConfig(learning_rate=0.05)
-    # revisiting a bucket NEVER builds a new executor
+    # revisiting a bucket NEVER builds a new executor — and building alone
+    # compiles NOTHING (jit is lazy until the first call)
     runner = HSGDRunner(model, fed, train)
-    for A in (2, 4, 8, 4, 2, 8, 8, 2):
-        runner.cohort_round_fn(2, 1, A, collect_stats=False)
+    with compile_guard(track=r"hsgd_cohort_round", exact=0):
+        for A in (2, 4, 8, 4, 2, 8, 8, 2):
+            runner.cohort_round_fn(2, 1, A, collect_stats=False)
     assert len(runner._round_cache) == 3
-    # end-to-end: a population run compiles one executor per bucket it visits
+    # end-to-end: a population run triggers exactly ONE XLA compile per
+    # cohort bucket it visits, regardless of how rounds revisit buckets
     pop = PopulationConfig(seed=2, devices_per_group=16, target_cohort=6,
                            duty_min=0.25, duty_max=0.9, period=7.0)
-    res = run_population(model, fed, train, data, pop, rounds=10)
+    with compile_guard(track=r"hsgd_cohort_round") as g:
+        res = run_population(model, fed, train, data, pop, rounds=10)
     buckets = {h["bucket"] for h in res["history"]}
+    assert g.total == len(buckets), g.by_name
     assert len(res["runner"]._round_cache) == len(buckets)
 
 

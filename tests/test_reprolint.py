@@ -1,0 +1,421 @@
+"""reprolint: one good/bad fixture pair per rule, suppression semantics,
+baseline round-trip, and compile_guard budget enforcement."""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import RULES, lint_paths, lint_source
+from repro.analysis.linter import (apply_baseline, fingerprint, load_baseline,
+                                   write_baseline)
+
+
+def findings_for(rule_id, source, path="src/x.py"):
+    return [f for f in lint_source(textwrap.dedent(source), path)
+            if f.rule == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# Fixture matrix: for each rule, BAD must fire and GOOD must not
+# ---------------------------------------------------------------------------
+
+FIXTURES = {
+    "RP1": {
+        "bad": """
+            import jax
+            def train(steps):
+                for _ in range(steps):
+                    fn = jax.jit(lambda x: x + 1)
+                    fn(1.0)
+        """,
+        "bad2": """
+            import jax
+            from functools import partial
+            def train(steps):
+                while steps:
+                    @partial(jax.jit, donate_argnums=(0,))
+                    def step(s):
+                        return s
+                    steps -= 1
+        """,
+        "good": """
+            import jax
+            def train(steps):
+                fn = jax.jit(lambda x: x + 1)
+                for _ in range(steps):
+                    fn(1.0)
+        """,
+        # a def INSIDE a loop whose body jits is fine: the body runs later
+        "good2": """
+            import jax
+            def build(buckets):
+                out = {}
+                for b in buckets:
+                    def make(bb=b):
+                        return jax.jit(lambda x: x * bb)
+                    out[b] = make
+                return out
+        """,
+    },
+    "RP2": {
+        "bad": """
+            import jax
+            from functools import partial
+            def run(state, data):
+                @partial(jax.jit, donate_argnums=(0,))
+                def step(s, d):
+                    return s
+                out = step(state, data)
+                return state, out
+        """,
+        "good": """
+            import jax
+            from functools import partial
+            def run(state, data):
+                @partial(jax.jit, donate_argnums=(0,))
+                def step(s, d):
+                    return s
+                state = step(state, data)
+                return state
+        """,
+        # rebind on the SAME line as the donating call is the idiom
+        "good2": """
+            import jax
+            from functools import partial
+            def run(state, data, rounds):
+                @partial(jax.jit, donate_argnums=(0,))
+                def step(s, d):
+                    return s, 0.0
+                for _ in range(rounds):
+                    state, loss = step(state, data)
+                return state, loss
+        """,
+    },
+    "RP3": {
+        "bad": """
+            import jax
+            def train(data, etas):
+                for eta in etas:
+                    pass
+
+                @jax.jit
+                def step(x):
+                    return x * eta
+                return step(data)
+        """,
+        "good": """
+            import jax
+            def train(data, etas):
+                @jax.jit
+                def step(x, eta):
+                    return x * eta
+                for eta in etas:
+                    data = step(data, eta)
+                return data
+        """,
+    },
+    "RP4": {
+        "bad": """
+            import jax
+            import numpy as np
+            @jax.jit
+            def step(x):
+                return np.asarray(x) + 1
+        """,
+        "bad2": """
+            import jax
+            class Engine:
+                def step(self):
+                    self._decode()
+                def _decode(self):
+                    toks = self.fn()
+                    return toks.item()
+        """,
+        "good": """
+            import jax
+            import jax.numpy as jnp
+            @jax.jit
+            def step(x):
+                return jnp.asarray(x) + 1
+        """,
+        "good2": """
+            import numpy as np
+            def postprocess(x):
+                return np.asarray(x)  # host code, not a compiled body
+        """,
+    },
+    "RP5": {
+        "bad": """
+            import numpy as np
+            def make_batch(n):
+                return np.random.randn(n)
+        """,
+        "bad2": """
+            import numpy as np
+            def make_rng():
+                return np.random.default_rng()
+        """,
+        "good": """
+            import numpy as np
+            def make_batch(n, seed):
+                rng = np.random.default_rng(seed)
+                return rng.standard_normal(n)
+        """,
+    },
+    "RP6": {
+        "bad": """
+            import time
+            import jax
+            def bench(fn, x):
+                t0 = time.time()
+                fn(x)
+                return time.time() - t0
+        """,
+        "good": """
+            import time
+            import jax
+            def bench(fn, x):
+                t0 = time.time()
+                jax.block_until_ready(fn(x))
+                return time.time() - t0
+        """,
+    },
+    "RP7": {
+        "bad": """
+            def accumulate(x, out=[]):
+                out.append(x)
+                return out
+        """,
+        "bad2": """
+            import jax.numpy as jnp
+            from dataclasses import dataclass
+            @dataclass
+            class Config:
+                weights: object = jnp.zeros(3)
+        """,
+        "good": """
+            from dataclasses import dataclass, field
+            import jax.numpy as jnp
+            def accumulate(x, out=None):
+                out = [] if out is None else out
+                out.append(x)
+                return out
+            @dataclass
+            class Config:
+                weights: object = field(default_factory=lambda: jnp.zeros(3))
+        """,
+    },
+    "RP8": {
+        "bad": """
+            from typing import NamedTuple
+            class TrainState(NamedTuple):
+                step: int
+        """,
+        "good": """
+            from typing import NamedTuple
+            from repro.checkpoint.ckpt import register_state_class
+            class TrainState(NamedTuple):
+                step: int
+            register_state_class(TrainState)
+        """,
+        # non-state NamedTuples are exempt: the registry is for checkpoints
+        "good2": """
+            from typing import NamedTuple
+            class Metrics(NamedTuple):
+                loss: float
+        """,
+    },
+}
+
+_CASES = [(rid, kind) for rid, fx in FIXTURES.items() for kind in fx]
+
+
+@pytest.mark.parametrize("rule_id,kind", _CASES,
+                         ids=[f"{r}-{k}" for r, k in _CASES])
+def test_fixture_matrix(rule_id, kind):
+    src = FIXTURES[rule_id][kind]
+    path = "benchmarks/x.py" if rule_id == "RP6" else "src/x.py"
+    hits = findings_for(rule_id, src, path=path)
+    if kind.startswith("bad"):
+        assert hits, f"{rule_id} missed its {kind} fixture"
+        assert all(f.rule == rule_id and f.line > 0 for f in hits)
+    else:
+        assert not hits, f"{rule_id} false-positive on {kind}: {hits}"
+
+
+def test_every_rule_has_fixtures_and_registry_entry():
+    assert set(FIXTURES) == set(RULES)
+    assert len(RULES) == 8
+    for rid, r in RULES.items():
+        assert r.id == rid and r.title and r.doc
+
+
+# ---------------------------------------------------------------------------
+# Path scoping
+# ---------------------------------------------------------------------------
+
+
+def test_rp5_exempts_data_fixtures():
+    src = "import numpy as np\nx = np.random.randn(3)\n"
+    assert findings_for("RP5", src, path="src/repro/data/synthetic.py") == []
+    assert findings_for("RP5", src, path="src/repro/core/hsgd.py")
+
+
+def test_rp6_only_applies_to_benchmarks_importing_jax():
+    src = FIXTURES["RP6"]["bad"]
+    assert findings_for("RP6", src, path="src/x.py") == []  # not benchmarks/
+    no_jax = textwrap.dedent(src).replace("import jax\n", "")
+    assert [f for f in lint_source(no_jax, "benchmarks/x.py")
+            if f.rule == "RP6"] == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_line_suppression():
+    src = ("import numpy as np\n"
+           "x = np.random.randn(3)  # reprolint: disable=RP5\n"
+           "y = np.random.randn(3)\n")
+    hits = [f for f in lint_source(src, "src/x.py") if f.rule == "RP5"]
+    assert [f.line for f in hits] == [3]
+
+
+def test_line_suppression_all_rules_and_multi():
+    src = ("import numpy as np\n"
+           "x = np.random.randn(3)  # reprolint: disable\n"
+           "y = np.random.randn(3)  # reprolint: disable=RP1,RP5\n")
+    assert [f for f in lint_source(src, "src/x.py") if f.rule == "RP5"] == []
+
+
+def test_file_suppression():
+    src = ("# reprolint: disable-file=RP5\n"
+           "import numpy as np\n"
+           "x = np.random.randn(3)\n"
+           "y = np.random.randn(3)\n")
+    assert [f for f in lint_source(src, "src/x.py") if f.rule == "RP5"] == []
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    hits = lint_source("def broken(:\n", "src/x.py")
+    assert len(hits) == 1 and hits[0].rule == "SYNTAX"
+
+
+# ---------------------------------------------------------------------------
+# Baseline round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_round_trip(tmp_path):
+    src = "import numpy as np\nx = np.random.randn(3)\n"
+    f = tmp_path / "src" / "mod.py"
+    f.parent.mkdir()
+    f.write_text(src)
+    findings = lint_paths([str(tmp_path / "src")])
+    assert [x.rule for x in findings] == ["RP5"]
+
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(str(bl_path), findings)
+    baseline = load_baseline(str(bl_path))
+    assert set(baseline) == {fingerprint(findings[0])}
+
+    # baselined finding no longer reported as new
+    new, stale = apply_baseline(findings, baseline)
+    assert new == [] and stale == []
+
+    # fingerprints survive line drift: same source, different line
+    drifted = lint_source("# a new comment line\n" + src, findings[0].path)
+    new, stale = apply_baseline(drifted, baseline)
+    assert new == [] and stale == []
+
+    # fixing the violation makes the baseline entry stale
+    new, stale = apply_baseline([], baseline)
+    assert new == [] and len(stale) == 1
+
+    data = json.loads(bl_path.read_text())
+    assert data["findings"][0]["rule"] == "RP5"
+
+
+def test_repo_baseline_matches_tree():
+    """The checked-in baseline covers the tree exactly: no new findings, no
+    stale entries, and it stays within the accepted-suppression budget."""
+    findings = lint_paths(["src", "benchmarks", "examples"])
+    baseline = load_baseline("reprolint_baseline.json")
+    assert len(baseline) <= 10
+    new, stale = apply_baseline(findings, baseline)
+    assert new == [], f"non-baselined findings: {new}"
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+# ---------------------------------------------------------------------------
+# compile_guard budgets
+# ---------------------------------------------------------------------------
+
+
+def test_compile_guard_counts_and_budgets():
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    from repro.analysis import CompileBudgetError, compile_guard
+
+    with compile_guard(track=r"guard_probe") as g:
+
+        @jax.jit
+        def guard_probe(x):
+            return x * 2
+
+        guard_probe(jnp.ones(3))
+        guard_probe(jnp.ones(3))  # cache hit: no new compile
+        guard_probe(jnp.ones(4))  # new shape: one more
+    assert g.total == 2 and g.count(r"guard_probe") == 2
+    assert g.by_name == {"guard_probe": 2}
+    # config restored after the region
+    assert not jax.config.jax_log_compiles
+
+    with pytest.raises(CompileBudgetError):
+        with compile_guard(track=r"guard_probe2", exact=2):
+            @jax.jit
+            def guard_probe2(x):
+                return x + 1
+
+            guard_probe2(jnp.ones(3))  # only 1 compile, budget says 2
+
+    with pytest.raises(CompileBudgetError):
+        with compile_guard(track=r"guard_probe3", max_compiles=1):
+            @jax.jit
+            def guard_probe3(x):
+                return x + 1
+
+            guard_probe3(jnp.ones(3))
+            guard_probe3(jnp.ones(4))
+
+    # dict budgets pin counts per executor name
+    with compile_guard(track=r"guard_", exact={"guard_probe4": 1}):
+        @jax.jit
+        def guard_probe4(x):
+            return x - 1
+
+        guard_probe4(jnp.ones(3))
+
+
+def test_compile_guard_nests():
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    from repro.analysis import compile_guard
+
+    with compile_guard(track=r"guard_nest") as outer:
+        with compile_guard(track=r"guard_nest", exact=1) as inner:
+            @jax.jit
+            def guard_nest_a(x):
+                return x * 3
+
+            guard_nest_a(jnp.ones(2))
+
+        @jax.jit
+        def guard_nest_b(x):
+            return x * 5
+
+        guard_nest_b(jnp.ones(2))
+    assert inner.total == 1
+    assert outer.total == 2
+    assert not jax.config.jax_log_compiles

@@ -140,27 +140,41 @@ def test_continuous_batching_slot_reuse():
 
 
 def test_executor_cache_bounded():
-    """One compile per (batch, cache, block) bucket — repeat traffic reuses
-    executors, a new cache bucket adds exactly one."""
+    """One XLA compile per (batch, cache, block) bucket — repeat traffic
+    reuses executors, a new cache bucket adds exactly one. compile_guard
+    counts the actual compiles by executor name; ``compile_counts()``
+    cross-checks the cache bookkeeping against them."""
+    from repro.analysis import compile_guard
+
     cfg = get_config("gemma3-1b", smoke=True)
     params = _init(cfg)
     rng = np.random.RandomState(0)
     prompts = rng.randint(0, cfg.vocab_size, (2, 8)).astype(np.int32)
     engine = ServeEngine(cfg, params, max_batch=2, cache_dtype=jnp.float32,
                          decode_block=4, temperature=0.0)
-    engine.generate(list(prompts), 8)
+    with compile_guard(track=r"serve_") as g1:
+        engine.generate(list(prompts), 8)
     c1 = engine.compile_counts()
     assert c1["decode_buckets"] == 1 and c1["decode_compiles"] == 1
     assert c1["prefill_compiles"] == c1["prefill_buckets"]
-    engine.generate(list(prompts), 8)  # same bucket: zero new compiles
+    assert g1.count(r"serve_decode") == 1, g1.by_name
+    assert g1.count(r"serve_prefill") == c1["prefill_buckets"]
+    assert g1.count(r"serve_insert") == c1["insert_buckets"]
+    # same bucket: zero new compiles of ANY serving executor
+    with compile_guard(track=r"serve_", exact=0):
+        engine.generate(list(prompts), 8)
     assert engine.compile_counts() == c1
-    engine.generate(list(prompts), 24)  # cache bucket 16 -> 32: one more
+    with compile_guard(track=r"serve_") as g3:
+        engine.generate(list(prompts), 24)  # cache bucket 16 -> 32: one more
     c3 = engine.compile_counts()
     assert c3["decode_buckets"] == 2 and c3["decode_compiles"] == 2
+    assert g3.count(r"serve_decode") == 1, g3.by_name  # exactly the new bucket
     # the resize must open NEW prefill/insert buckets, not silently re-jit
     # the old executors with differently-shaped caches
     assert c3["prefill_compiles"] == c3["prefill_buckets"]
     assert c3["insert_compiles"] == c3["insert_buckets"]
+    assert g3.count(r"serve_prefill") == c3["prefill_buckets"] - c1["prefill_buckets"]
+    assert g3.count(r"serve_insert") == c3["insert_buckets"] - c1["insert_buckets"]
 
 
 def test_hybrid_ring_wrap_prefill_matches_sequential():
