@@ -29,6 +29,7 @@ from benchmarks.common import csv_row, setup_experiment, sizes_for
 import jax
 
 from repro.common.config import FederationConfig
+from repro.common.io import atomic_write_json
 from repro.core import comm_model as CM
 from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner
 from repro.core.hsgd import HSGDRunner, init_state, make_group_weights
@@ -145,8 +146,7 @@ def main(argv=None):
                      "bytes": ad_bytes.tolist(),
                      "history": history},
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+    atomic_write_json(args.out, result)
     print(f"# wrote {os.path.abspath(args.out)}")
 
     if args.figs:

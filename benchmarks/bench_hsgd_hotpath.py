@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, setup_experiment
+from repro.common.io import atomic_write_json
 from repro.core.hsgd import HSGDRunner, exchange, init_state, make_group_weights
 from repro.models import cnn as C
 from repro.models import layers as L
@@ -185,8 +186,7 @@ def main():
     print(f"# steps/s speedup vs pre-PR: {results['speedup_steps_per_s']:.2f}x, "
           f"exchange: {results['speedup_exchange']:.2f}x")
 
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=2)
+    atomic_write_json(args.out, results, indent=2)
     print(f"# wrote {os.path.abspath(args.out)}")
 
 

@@ -32,6 +32,7 @@ from benchmarks.common import csv_row
 import jax
 
 from repro.common.config import get_config
+from repro.common.io import atomic_write_json
 from repro.core import comm_model as CM
 from repro.core.controller import AdaptiveConfig
 from repro.core.metrics import smoothed_losses, steps_to_target
@@ -148,8 +149,7 @@ def main(argv=None):
         "adaptive": {"losses": ad_losses.tolist(), "bytes": ad_bytes.tolist(),
                      "history": history},
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+    atomic_write_json(args.out, result)
     print(f"# wrote {os.path.abspath(args.out)}")
     return result
 

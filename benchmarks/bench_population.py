@@ -31,6 +31,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import csv_row, setup_experiment
 
+from repro.common.io import atomic_write_json
 from repro.core.controller import AdaptiveConfig
 from repro.core.metrics import smoothed_losses, steps_to_target
 from repro.core.population import (
@@ -187,8 +188,7 @@ def main(argv=None):
                          "history": res_ad["history"]},
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+    atomic_write_json(args.out, result)
     print(f"# wrote {os.path.abspath(args.out)}")
     return result
 

@@ -34,6 +34,7 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.common.config import get_config
+from repro.common.io import atomic_write_json
 from repro.launch.engine import (ServeEngine, sequential_decode,
                                  sequential_generate, sequential_prefill,
                                  sequential_step_fn)
@@ -270,8 +271,7 @@ def main(argv=None):
                 results = json.load(f)
         results["load"] = bench_load(args)
         _load_acceptance(results)
-        with open(args.out, "w") as f:
-            json.dump(results, f, indent=2)
+        atomic_write_json(args.out, results, indent=2)
         print(f"# wrote {os.path.abspath(args.out)} (load section only)")
         return results
 
@@ -315,8 +315,7 @@ def main(argv=None):
     if args.load:
         results["load"] = bench_load(args)
         _load_acceptance(results)
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=2)
+    atomic_write_json(args.out, results, indent=2)
     print(f"# wrote {os.path.abspath(args.out)}")
     return results
 

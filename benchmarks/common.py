@@ -23,10 +23,12 @@ from repro.models.split_model import cnn_hybrid, lstm_hybrid
 
 
 def setup_experiment(dataset="organamnist", n=1024, groups=4, devices=32, alpha=0.25,
-                     q=1, p=1, lr=0.02, seed=0, compression_k=0.0, quant=0):
+                     q=1, p=1, lr=0.02, seed=0, compression_k=0.0, quant=0,
+                     robust_agg="mean"):
     spec = DATASETS[dataset]
     fed = FederationConfig(num_groups=groups, devices_per_group=devices, alpha=alpha,
-                           local_interval=q, global_interval=p)
+                           local_interval=q, global_interval=p,
+                           robust_agg=robust_agg)
     train = TrainConfig(learning_rate=lr, compression_k=compression_k,
                         quantization_bits=quant)
     X, y = make_dataset(spec, n, seed=seed)

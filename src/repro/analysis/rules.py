@@ -19,6 +19,8 @@ Rules (see README.md for the war stories):
                                 field defaults
   RP8  unregistered-state     — ``*State`` NamedTuple never passed to
                                 ``checkpoint.register_state_class``
+  RP9  torn-artifact-write    — bare ``open(path, "w")`` of a JSON/manifest
+                                run artifact outside an atomic-write helper
 """
 from __future__ import annotations
 
@@ -645,3 +647,71 @@ def check_unregistered_state(ctx: FileContext) -> Iterator[Finding]:
                 f"'{node.name}' is a state NamedTuple but is never passed to "
                 f"checkpoint.register_state_class — a checkpoint restore "
                 f"returns an anonymous lookalike")
+
+
+# ---------------------------------------------------------------------------
+# RP9 — torn run-artifact writes (non-atomic open(path, "w"))
+# ---------------------------------------------------------------------------
+
+
+def _rp9_artifact_evidence(ctx: FileContext, call: ast.Call) -> Optional[str]:
+    """Why this ``open(...)`` looks like a durable run-artifact write:
+    a ``.json``/manifest path constant, or a ``json.dump`` into the handle
+    inside the enclosing ``with``. None = not an artifact write."""
+    if call.args:
+        for node in ast.walk(call.args[0]):
+            if isinstance(node, ast.Constant) and isinstance(node.value, str):
+                s = node.value
+                if ".tmp" in s:
+                    return None  # temp-then-replace staging file
+                if s.endswith(".json") or "manifest" in s:
+                    return f"path {s!r}"
+    w = ctx.enclosing(call, ast.With)
+    if w is not None:
+        for node in ast.walk(w):
+            if isinstance(node, ast.Call) and \
+                    ctx.call_canonical(node) in ("json.dump", "json.dumps"):
+                if ctx.call_canonical(node) == "json.dump":
+                    return "json.dump into the handle"
+    return None
+
+
+@rule("RP9", "non-atomic write of a JSON/manifest run artifact")
+def check_torn_artifact_write(ctx: FileContext) -> Iterator[Finding]:
+    """A bare ``open(path, "w")`` truncates the artifact FIRST and fills it
+    as serialization proceeds: a crash (or a coordinator preemption — the
+    fault class the resilient runtime injects on purpose) between those two
+    moments leaves a torn half-file where a resumable checkpoint manifest or
+    benchmark result used to be. Durable JSON artifacts must stage to a temp
+    file and commit with one atomic ``os.replace`` —
+    ``repro.common.io.atomic_write_json`` is the repo's helper. Functions
+    named ``atomic_*`` (the helpers themselves) and writes whose enclosing
+    function commits via ``os.replace`` are exempt."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or ctx.call_canonical(node) != "open":
+            continue
+        mode = None
+        if len(node.args) >= 2:
+            mode = node.args[1]
+        for kw in node.keywords:
+            if kw.arg == "mode":
+                mode = kw.value
+        if not (isinstance(mode, ast.Constant) and isinstance(mode.value, str)
+                and mode.value in ("w", "wt", "w+")):
+            continue
+        fn = ctx.enclosing(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        if fn is not None:
+            if fn.name.startswith("atomic_"):
+                continue  # the atomic-write helper itself
+            if any(isinstance(n, ast.Call)
+                   and ctx.call_canonical(n) == "os.replace"
+                   for n in ast.walk(fn)):
+                continue  # stages + commits atomically in place
+        evidence = _rp9_artifact_evidence(ctx, node)
+        if evidence is None:
+            continue
+        yield ctx.finding(
+            "RP9", node,
+            f"bare open(..., \"w\") of a run artifact ({evidence}) — a crash "
+            f"mid-write leaves a torn file; stage to a temp file and commit "
+            f"with os.replace (repro.common.io.atomic_write_json)")

@@ -16,6 +16,7 @@ existed load the old way (nested dicts with ``__seq{i}`` keys).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 from collections import namedtuple
@@ -24,6 +25,7 @@ from typing import Any, Dict, Tuple, Type
 import jax
 import numpy as np
 
+from repro.common.io import atomic_write_json
 from repro.common.pytree import flatten_dict, unflatten_dict
 
 # name -> class for namedtuple restoration (populated by the state owners,
@@ -79,26 +81,56 @@ def _rebuild(nested, desc):
 
 
 def save_checkpoint(path: str, params: Any, step: int = 0, extra: Dict | None = None):
+    """Atomically commit a checkpoint to directory ``path``.
+
+    A preemption mid-save must leave the previous checkpoint loadable, so the
+    save never touches a file the current manifest references: arrays go to a
+    fresh step-stamped ``.npz`` (via a temp file + ``os.replace``), and the
+    manifest — whose replacement is the single atomic commit point — is
+    written last through ``atomic_write_json``. Only after the commit are
+    array files from superseded checkpoints pruned (best-effort).
+    """
     os.makedirs(path, exist_ok=True)
     leaves = flatten_dict(_to_nested_dict(params))
     arrays = {k: np.asarray(v) for k, v in leaves.items()}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    arrays_file = f"arrays-{int(step):012d}.npz"
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)  # a file object defeats savez's ".npz" renaming
+    tmp = os.path.join(path, arrays_file + f".tmp.{os.getpid()}")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(buf.getvalue())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, os.path.join(path, arrays_file))
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
     manifest = {
         "step": int(step),
         "keys": sorted(arrays),
         "extra": extra or {},
+        "arrays_file": arrays_file,
         "shapes": {k: list(v.shape) for k, v in arrays.items()},
         "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
         "structure": _structure_of(params),
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    atomic_write_json(os.path.join(path, "manifest.json"), manifest)
+    for name in os.listdir(path):  # prune superseded/orphaned array files
+        if name.startswith("arrays") and name != arrays_file:
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:
+                pass
 
 
 def load_checkpoint(path: str) -> Tuple[Any, int, Dict]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as z:
+    # pre-atomic checkpoints recorded no arrays_file and used a fixed name
+    arrays_file = manifest.get("arrays_file", "arrays.npz")
+    with np.load(os.path.join(path, arrays_file)) as z:
         flat = {k: z[k] for k in manifest["keys"]}
     params = unflatten_dict(flat)
     if "structure" in manifest:  # pre-descriptor checkpoints stay dicts

@@ -201,6 +201,14 @@ class FederationConfig:
     # vertical feature split fraction held by the hospital
     hospital_feature_frac: float = 0.5
     non_iid_labels_per_group: int = 2
+    # --- robust aggregation (fault-tolerant federation layer) ---
+    # how a screened round combines the surviving device towers in eq. (1):
+    # "mean" keeps the masked mean over trusted slots; "median"/"trimmed"
+    # use the coordinate-wise robust statistic. Groups whose screening
+    # passes always fall back to the existing masked-mean path bit-exactly.
+    robust_agg: str = "mean"
+    trim_frac: float = 0.1      # per-side trim fraction for "trimmed"
+    screen_zmax: float = 8.0    # norm-outlier cut: ||g|| > zmax * median norm
 
     def __post_init__(self):
         if self.local_interval < 1 or self.global_interval < 1:
@@ -210,6 +218,13 @@ class FederationConfig:
             raise ValueError(
                 f"global_interval P={self.global_interval} must be a multiple of "
                 f"local_interval Q={self.local_interval} (Λ = P/Q is integral in Alg. 1)")
+        if self.robust_agg not in ("mean", "median", "trimmed"):
+            raise ValueError(
+                f"robust_agg must be mean|median|trimmed, got {self.robust_agg!r}")
+        if not 0.0 <= self.trim_frac < 0.5:
+            raise ValueError(f"trim_frac must be in [0, 0.5), got {self.trim_frac}")
+        if self.screen_zmax <= 1.0:
+            raise ValueError(f"screen_zmax must be > 1, got {self.screen_zmax}")
 
     @property
     def lam(self) -> int:

@@ -1,0 +1,38 @@
+"""Crash-safe small-file IO: write-to-temp + ``os.replace`` commit.
+
+A coordinator preemption mid-write must never leave a torn manifest or a
+half-serialized ``BENCH_*.json`` behind — ``os.replace`` is atomic on POSIX
+(and on Windows for same-volume paths), so readers observe either the old
+file or the complete new one, never a prefix. Every JSON/manifest writer in
+the repo goes through these helpers (reprolint RP9 flags bare
+``open(path, "w")`` writers of such files).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+
+def atomic_write_bytes(path: str, payload: bytes) -> None:
+    """Write ``payload`` to ``path`` atomically (temp file + ``os.replace``)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def atomic_write_text(path: str, text: str) -> None:
+    atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def atomic_write_json(path: str, obj: Any, indent: int = 1) -> None:
+    """Serialize ``obj`` and commit it to ``path`` in one atomic rename."""
+    atomic_write_text(path, json.dumps(obj, indent=indent))

@@ -282,6 +282,28 @@ class ControllerCore:
     def done(self) -> bool:
         return self.steps_done >= self.cfg.total_steps
 
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-able ledger snapshot (everything plan/record mutate) so a
+        checkpointed run resumes with bit-identical controller decisions."""
+        return {
+            "probe": dict(self.probe),
+            "steps_done": int(self.steps_done),
+            "bytes_spent": float(self.bytes_spent),
+            "seconds_spent": float(self.seconds_spent),
+            "rung": int(self.rung),
+            "eta_prev": float(self.eta_prev),
+            "history": [dict(h) for h in self.history],
+        }
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        self.probe = dict(sd["probe"])
+        self.steps_done = int(sd["steps_done"])
+        self.bytes_spent = float(sd["bytes_spent"])
+        self.seconds_spent = float(sd["seconds_spent"])
+        self.rung = int(sd["rung"])
+        self.eta_prev = float(sd["eta_prev"])
+        self.history = [dict(h) for h in sd["history"]]
+
     def plan(self) -> Tuple[RoundPlan, Tuple[float, int]]:
         """Next round's settings + its (k_frac, levels) ladder rung."""
         plan = plan_round(self.probe, self.steps_done, self.bytes_spent,

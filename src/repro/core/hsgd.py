@@ -221,6 +221,110 @@ def local_sgd_step_stats(
 
 
 # ---------------------------------------------------------------------------
+# Fault injection + compiled screening (the fault-tolerant step)
+# ---------------------------------------------------------------------------
+
+
+def _inject_grads(g2, grad_fault):
+    """Add the per-device fault term where nonzero: [M, A] -> every g2 leaf.
+
+    Selected through jnp.where, NOT a blanket ``g + fault``: adding 0.0 would
+    flip -0.0 gradients to +0.0 and break the fault-free bit-identity pin.
+    NaN fault terms select the faulty branch (NaN != 0 is True). The whole
+    injection sits behind a lax.cond: an XLA conditional leaves fault-free
+    steps' gradient pipeline untouched at runtime (the per-leaf selects were
+    a measurable fraction of the step on small models), and the identity
+    branch returns g2 itself — bit-identical by construction.
+    """
+
+    def add(g2):
+        def leaf(g):
+            f = grad_fault.reshape(
+                grad_fault.shape + (1,) * (g.ndim - 2)).astype(g.dtype)
+            return jnp.where(f != 0, g + f, g)
+
+        return jax.tree.map(leaf, g2)
+
+    return jax.lax.cond(jnp.any(grad_fault != 0), add, lambda g: g, g2)
+
+
+def local_sgd_step_guarded(
+    model: HybridModel,
+    state: HSGDState,
+    lr,
+    pmask: jnp.ndarray,
+    grad_fault: Optional[jnp.ndarray] = None,
+    screen: bool = False,
+    zmax: float = 8.0,
+) -> Tuple[HSGDState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``local_sgd_step`` with optional fault injection and compiled screening.
+
+    Screening is pure jnp.where masking — no host syncs, RP4-clean — and with
+    every mask all-ones the applied update is bit-identical to the unguarded
+    step. Per step it zeroes:
+
+      * device updates whose g2 is non-finite, or whose gradient sq-norm
+        exceeds ``zmax² ×`` the group's masked median device sq-norm
+        (norm-outlier screen over the real, finite cohort slots);
+      * group (θ0, θ1) updates whose hospital gradient is non-finite, or —
+        with ≥ 3 groups — an outlier against the cross-group median norm.
+
+    Returns (state, loss, dev_ok [M, A], grp_ok [M]); the reported loss
+    averages only unflagged groups when any group is flagged.
+    """
+    losses, g0, g1, g2 = _local_grads(model, state)
+    if grad_fault is not None:
+        g2 = _inject_grads(g2, grad_fault)
+    M = pmask.shape[0]
+    if not screen:
+        dev_ok = jnp.ones(pmask.shape, jnp.float32)
+        grp_ok = jnp.ones((M,), jnp.float32)
+        return _apply_sgd(state, lr, g0, g1, g2), jnp.mean(losses), dev_ok, grp_ok
+
+    dn2 = F.worker_sqnorm(g2, lead=2)  # [M, A]
+    finite_d = jnp.isfinite(dn2)
+    med = F.masked_median_values(dn2, pmask * finite_d)  # [M]
+    # Floor the screen scale with the fleet-wide median device norm: a ratio
+    # cut against the per-group median alone falsely flags the one device
+    # that still has signal once its peers converge (median -> ~0). The
+    # floor only ever RAISES cuts, so NaN/Inf (isfinite) and scale faults
+    # (x1e4 additive, x1e6 corruption — many orders above any fleet median)
+    # are still caught.
+    fleet = F.masked_median_values(
+        dn2.reshape(1, -1), (pmask * finite_d).reshape(1, -1))[0]
+    cut = (zmax * zmax) * jnp.maximum(jnp.maximum(med, fleet), 1e-30)
+    dev_ok = (finite_d & (dn2 <= cut[:, None])).astype(jnp.float32)
+
+    hn2 = F.worker_sqnorm(g0, lead=1) + F.worker_sqnorm(g1, lead=1)  # [M]
+    grp_fin = jnp.isfinite(hn2)
+    if M >= 3:  # the cross-group outlier cut needs a meaningful median
+        gmed = F.masked_median_values(hn2[None, :], grp_fin[None, :].astype(jnp.float32))[0]
+        # same converged-peer guard: floor with the fleet device-norm median
+        gcut = (zmax * zmax) * jnp.maximum(jnp.maximum(gmed, fleet), 1e-30)
+        grp_fin = grp_fin & (hn2 <= gcut)
+    grp_ok = grp_fin.astype(jnp.float32)
+
+    def mask_grp(g):
+        ok = grp_ok.reshape((-1,) + (1,) * (g.ndim - 1))
+        return jnp.where(ok > 0, g, jnp.zeros((), g.dtype))
+
+    def mask_dev(g):
+        ok = dev_ok.reshape(dev_ok.shape + (1,) * (g.ndim - 2))
+        return jnp.where(ok > 0, g, jnp.zeros((), g.dtype))
+
+    g0 = jax.tree.map(mask_grp, g0)
+    g1 = jax.tree.map(mask_grp, g1)
+    g2 = jax.tree.map(mask_dev, g2)
+
+    n_ok = jnp.sum(grp_ok)
+    loss_all = jnp.mean(losses)
+    # where, not multiply: a flagged group's NaN loss would poison the sum
+    loss_ok = jnp.sum(jnp.where(grp_ok > 0, losses, 0.0)) / jnp.maximum(n_ok, 1.0)
+    loss = jnp.where(n_ok == M, loss_all, loss_ok)
+    return _apply_sgd(state, lr, g0, g1, g2), loss, dev_ok, grp_ok
+
+
+# ---------------------------------------------------------------------------
 # Exchange + aggregations
 # ---------------------------------------------------------------------------
 
@@ -235,6 +339,9 @@ def exchange(
     fused: bool = True,
     idx: Optional[jnp.ndarray] = None,
     pmask: Optional[jnp.ndarray] = None,
+    trust: Optional[jnp.ndarray] = None,
+    msg_fault: Optional[jnp.ndarray] = None,
+    screen: bool = False,
 ) -> HSGDState:
     """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange.
 
@@ -247,9 +354,21 @@ def exchange(
     by passing ``idx`` ([M, A] data-row indices, padded to the bucket size by
     repeating real members) and ``pmask`` ([M, A], 0 on padding slots): the
     per-interval A_m draw is skipped and eq. (1) excludes the padding slots.
+
+    The fault-tolerant path adds three optional legs, all pure jnp.where
+    selections so the clean case is bit-identical to the plain path:
+    ``trust`` ([M, A], 1.0 = slot's updates passed screening) switches eq. (1)
+    to ``robust_local_aggregate`` per ``fed.robust_agg``; ``msg_fault`` ([M],
+    0 = clean) multiplies the group's compressed ζ2 uplink (bit-flip
+    corruption); ``screen`` zeroes non-finite message entries at the receiver.
     """
     key, k_sample = jax.random.split(state.key)
-    theta2_group = F.local_aggregate(state.theta2, pmask)  # eq (1)
+    if trust is not None and pmask is not None:
+        theta2_group = F.robust_local_aggregate(  # eq (1) under screening
+            state.theta2, pmask, trust,
+            method=fed.robust_agg, trim_frac=fed.trim_frac)
+    else:
+        theta2_group = F.local_aggregate(state.theta2, pmask)  # eq (1)
     A = fed.sampled_devices if idx is None else idx.shape[1]
     theta2 = F.broadcast_to_devices(theta2_group, A)  # line 15
 
@@ -272,6 +391,25 @@ def exchange(
                            levels=quant_levels)
             msg = jax.tree.map(comp, msg)
         stale_theta0, z1, z2 = msg["theta0"], msg["z1"], msg["z2"]
+
+    if msg_fault is not None:  # corruption hits the compressed uplink payload
+        def corrupt(z2):
+            def leaf(x):
+                f = msg_fault.reshape(
+                    (-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+                return jnp.where(f != 0, x * f, x)
+
+            return jax.tree.map(leaf, z2)
+
+        # cond, not where: clean rounds skip the corruption kernels entirely
+        z2 = jax.lax.cond(jnp.any(msg_fault != 0), corrupt, lambda z: z, z2)
+    if screen:  # receiver-side screen: drop (zero) non-finite ζ2 entries.
+        # Only the device uplink leg needs it: the fault model corrupts ζ2 in
+        # flight, while θ0/ζ1 originate from hospital state that the per-step
+        # group screen keeps finite — sweeping those (much larger) trees too
+        # costs real step time for no detection.
+        clean = lambda x: jnp.where(jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+        z2 = jax.tree.map(clean, z2)
 
     stale = {"theta0": stale_theta0, "z1": z1, "z2": z2}
     return state._replace(theta2=theta2, stale=stale, batch=batch, key=key)
@@ -523,6 +661,112 @@ class HSGDRunner:
                 return state, out
 
             fn = self._round_cache[key] = hsgd_cohort_round
+        return fn
+
+    def _guarded_round_impl(self, state, data, group_weights, lr, Q: int,
+                            lam: int, k: float, b: int, idx, pmask,
+                            grad_fault, msg_fault, screen: bool):
+        """Cohort round with fault injection and (optionally) the compiled
+        defense: per-step screening masks, receiver-side message screening,
+        and the ``fed.robust_agg`` aggregation over surviving slots. With all
+        fault terms zero and screening on, every mask stays all-ones and the
+        parameter trajectory is bit-identical to ``_round_impl``'s cohort
+        path (pinned by a test; the reported loss scalar may differ in the
+        final ULP — XLA fuses the cross-group mean reduction differently in
+        this graph)."""
+        fed, model = self.fed, self.model
+        if self.do_global_agg:
+            state = global_aggregation(state, fed, group_weights)
+        lr_of = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+        do_exchange = partial(
+            exchange, model, data=data, fed=fed,
+            compression_k=k, quant_levels=b, fused=self.fused_compression,
+            idx=idx, pmask=pmask, msg_fault=msg_fault, screen=screen,
+        )
+
+        def interval(carry, _):
+            state, trust = carry
+            state = do_exchange(state, trust=trust if screen else None)
+
+            def sgd_step(carry, _):
+                state, trust = carry
+                state, loss, dev_ok, _grp_ok = local_sgd_step_guarded(
+                    model, state, lr_of(state.step), pmask,
+                    grad_fault=grad_fault, screen=screen, zmax=fed.screen_zmax)
+                # sticky within the round: a flagged device stays out of
+                # every later aggregation (x1.0 is bitwise identity: the
+                # clean path's trust never changes)
+                trust = trust * dev_ok
+                return (state, trust), loss
+
+            (state, trust), losses = jax.lax.scan(
+                sgd_step, (state, trust), None, length=Q)
+            return (state, trust), losses
+
+        trust0 = jnp.ones_like(pmask)
+        (state, trust), losses = jax.lax.scan(
+            interval, (state, trust0), None, length=lam)
+        # check-in: device slots leave the round uniform (robust under screen)
+        A = pmask.shape[1]
+        if screen:
+            theta2_group = F.robust_local_aggregate(
+                state.theta2, pmask, trust,
+                method=fed.robust_agg, trim_frac=fed.trim_frac)
+        else:
+            theta2_group = F.local_aggregate(state.theta2, pmask)
+        state = state._replace(theta2=F.broadcast_to_devices(theta2_group, A))
+        flagged = jnp.sum(pmask * (1.0 - trust))
+        return state, losses.reshape(-1), flagged
+
+    def fault_round_fn(self, P: int, Q: int, cohort_size: int,
+                       compression_k: Optional[float] = None,
+                       quant_levels: Optional[int] = None,
+                       robust: bool = True):
+        """Compiled fault-injectable round executor (the resilient runtime's
+        work-horse).
+
+        fn(state, data, group_weights, lr, participants, pmask, grad_fault,
+        msg_fault) -> (state, losses [P], flagged). ``grad_fault`` [M, A] and
+        ``msg_fault`` [M] are traced values (0 = clean) — re-drawing faults
+        each round never recompiles. ``robust=True`` folds the compiled
+        defense in (screening masks + ``fed.robust_agg`` aggregation);
+        ``robust=False`` is the naive stack: same injection, no defense.
+        ``flagged`` counts real slot-updates the screen rejected (always 0.0
+        on the naive path).
+
+        Cached per (P, Q, cohort_size, k, b, robust) bucket alongside the
+        plain executors — same one-executor-per-bucket discipline.
+        """
+        if P < 1 or Q < 1 or P % Q:
+            raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
+        if cohort_size < 1:
+            raise ValueError(f"cohort_size={cohort_size} must be >= 1")
+        k = self.train.compression_k if compression_k is None else compression_k
+        b = self.train.quantization_bits if quant_levels is None else quant_levels
+        key = (P, Q, cohort_size, k, b, "robust" if robust else "faulty")
+        fn = self._round_cache.get(key)
+        if fn is None:
+            lam = P // Q
+
+            if robust:
+                @partial(jax.jit, donate_argnums=(0,))
+                def hsgd_robust_round(state, data, group_weights, lr,
+                                      participants, pmask, grad_fault, msg_fault):
+                    return self._guarded_round_impl(
+                        state, data, group_weights, lr, Q, lam, k, b,
+                        participants, pmask, grad_fault, msg_fault, screen=True)
+
+                fn = hsgd_robust_round
+            else:
+                @partial(jax.jit, donate_argnums=(0,))
+                def hsgd_faulty_round(state, data, group_weights, lr,
+                                      participants, pmask, grad_fault, msg_fault):
+                    return self._guarded_round_impl(
+                        state, data, group_weights, lr, Q, lam, k, b,
+                        participants, pmask, grad_fault, msg_fault, screen=False)
+
+                fn = hsgd_faulty_round
+            self._round_cache[key] = fn
         return fn
 
     def run(self, state: HSGDState, data, group_weights, rounds: int,

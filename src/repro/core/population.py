@@ -40,6 +40,7 @@ participant schedule and latency draws on every run (pinned by a test).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Any, Dict, List, NamedTuple, Optional
 
@@ -72,6 +73,30 @@ class PopulationConfig:
     deadline_quantile: float = 0.8  # semi-async: close the round here
     staleness_damping: float = 0.6  # late update weight *= damping**staleness
     max_staleness: int = 4          # older than this -> dropped
+    # retry/backoff (fault tolerance): when a semi-async round's on-time
+    # fraction falls below min_quorum, the deadline re-extends by
+    # backoff_factor, up to max_retries times (capped at the slowest
+    # participant); groups still late after the last retry go down the
+    # usual staleness path and are dropped past max_staleness.
+    min_quorum: float = 0.5
+    max_retries: int = 2
+    backoff_factor: float = 2.0
+
+    def __post_init__(self):
+        if self.devices_per_group < 1 or self.target_cohort < 1:
+            raise ValueError(
+                f"devices_per_group/target_cohort must be >= 1, got "
+                f"{self.devices_per_group}/{self.target_cohort}")
+        if not 0.0 < self.deadline_quantile <= 1.0:
+            raise ValueError(
+                f"deadline_quantile must be in (0, 1], got {self.deadline_quantile}")
+        if not 0.0 <= self.min_quorum <= 1.0:
+            raise ValueError(f"min_quorum must be in [0, 1], got {self.min_quorum}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_factor <= 1.0:
+            raise ValueError(
+                f"backoff_factor must be > 1, got {self.backoff_factor}")
 
 
 class Cohort(NamedTuple):
@@ -212,9 +237,22 @@ class PopulationScheduler:
         return self.registry.sample_cohort(self.round, self.now)
 
     def settle(self, cohort: Cohort, durations: np.ndarray):
-        """Advance the clock; return (next-round weights [M], round record)."""
+        """Advance the clock; return (next-round weights [M], round record).
+
+        Semi-async retry/backoff: when the quantile deadline leaves fewer
+        than ``min_quorum`` of the participating groups on time (mass
+        stragglers — e.g. injected latency spikes), the deadline re-extends
+        by ``backoff_factor`` up to ``max_retries`` times, capped at the
+        slowest participant. The extension seconds are realized sim time —
+        they advance the clock, so the adaptive governor's wall-clock ledger
+        is charged for every retry (``core.record(..., seconds=now-prev)``).
+        Groups still late after the last retry follow the usual staleness
+        path (damped, dropped past ``max_staleness``).
+        """
         part = cohort.counts > 0
         dur = np.asarray(durations, np.float64)
+        retries = 0
+        base_deadline = 0.0
         if not part.any():
             deadline = 0.0
             on_time = part
@@ -223,7 +261,15 @@ class PopulationScheduler:
             on_time = part
         else:
             deadline = float(np.quantile(dur[part], self.cfg.deadline_quantile))
+            base_deadline = deadline
             on_time = part & (dur <= deadline)
+            worst = float(dur[part].max())
+            while (retries < self.cfg.max_retries
+                   and on_time.sum() < self.cfg.min_quorum * part.sum()
+                   and deadline < worst):
+                deadline = min(deadline * self.cfg.backoff_factor, worst)
+                retries += 1
+                on_time = part & (dur <= deadline)
         self.staleness = np.where(on_time, 0, self.staleness + 1)
         for s in self.staleness[part]:
             self.stale_hist[int(s)] = self.stale_hist.get(int(s), 0) + 1
@@ -242,8 +288,25 @@ class PopulationScheduler:
             "bucket": int(cohort.pmask.shape[1]),
             "late": int((part & ~on_time).sum()),
             "staleness": self.staleness.tolist(),
+            "retries": retries,
+            "retry_seconds": max(deadline - base_deadline, 0.0) if retries else 0.0,
         }
         return w, rec
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Ledger snapshot for checkpointing (everything ``settle`` mutates)."""
+        return {
+            "now": float(self.now),
+            "round": int(self.round),
+            "staleness": self.staleness.tolist(),
+            "stale_hist": {str(k): int(v) for k, v in self.stale_hist.items()},
+        }
+
+    def load_state_dict(self, sd: Dict[str, Any]) -> None:
+        self.now = float(sd["now"])
+        self.round = int(sd["round"])
+        self.staleness = np.asarray(sd["staleness"], np.int64)
+        self.stale_hist = {int(k): int(v) for k, v in sd["stale_hist"].items()}
 
 
 def make_time_of(sizes_of, ladder, registry: DeviceRegistry, t_compute: float,
@@ -341,6 +404,198 @@ def run_population(model, fed: FederationConfig, train: TrainConfig,
         "sim_seconds": sched.now,
         "runner": runner,
         "state": state,
+    }
+
+
+class CoordinatorPreempted(RuntimeError):
+    """The fault plan killed the coordinator at a round boundary. Re-run with
+    ``resume=True`` to continue bit-identically from the last auto-checkpoint."""
+
+    def __init__(self, round_idx: int, ckpt_dir: Optional[str]):
+        super().__init__(
+            f"coordinator preempted at round {round_idx}"
+            + (f"; resume from {ckpt_dir}" if ckpt_dir else " (no checkpoint dir)"))
+        self.round_idx = round_idx
+        self.ckpt_dir = ckpt_dir
+
+
+def run_population_resilient(model, fed: FederationConfig, train: TrainConfig,
+                             data, pop: PopulationConfig, rounds: int,
+                             faults=None, injector=None,
+                             mode: str = "semi_async", robust: bool = True,
+                             monitor: bool = True, t_compute: float = 0.05,
+                             links=CM.WAN, key=None,
+                             runner: Optional[HSGDRunner] = None,
+                             ckpt_dir: Optional[str] = None,
+                             ckpt_every: int = 0, resume: bool = False,
+                             divergence_factor: float = 20.0,
+                             eta_shrink: float = 0.5,
+                             max_rollbacks: int = 3) -> Dict[str, Any]:
+    """Fault-tolerant population run: seeded injection + the recovery loop.
+
+    Per round, the injector realizes the plan's faults: dropped devices leave
+    the participation mask, NaN/outlier gradient terms and corrupted uplink
+    multipliers ride into the compiled executor as traced values, latency
+    spikes stretch the settle durations (charging the retry/backoff machinery
+    and the wall-clock ledger), and lost/duplicated round updates re-weight
+    the next global aggregation. ``robust=True`` runs the screened executor
+    (``HSGDRunner.fault_round_fn``) with ``fed.robust_agg`` aggregation;
+    ``robust=False`` is the naive stack under the same faults.
+
+    Recovery: every ``ckpt_every`` rounds the ``HSGDState`` plus the
+    scheduler ledger, loss/time curves, and weights are checkpointed
+    atomically; the divergence monitor (non-finite round loss, or a spike
+    past ``divergence_factor`` × the best round loss) rolls back to the last
+    checkpoint with the learning rate shrunk by ``eta_shrink`` (at most
+    ``max_rollbacks`` times). A planned coordinator preemption raises
+    ``CoordinatorPreempted`` at the round boundary; calling again with
+    ``resume=True`` reloads everything and continues bit-identically (the
+    injector redraws round r's faults from ``default_rng([seed, 3, r])``, so
+    the fault schedule needs no serialized RNG state).
+    """
+    import jax
+
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+    from repro.core.controller import hsgd_sizes_of
+    from repro.core.faults import FaultInjector, FaultPlan
+
+    if key is None:
+        key = jax.random.PRNGKey(pop.seed)
+    if injector is None:
+        injector = FaultInjector(faults or FaultPlan())
+    runner = runner or HSGDRunner(model, fed, train)
+    state = init_state(key, model, fed, data)
+    base_w = np.asarray(make_group_weights(data))
+    registry = DeviceRegistry(data, pop)
+    sched = PopulationScheduler(registry, base_w, mode=mode)
+    sizes_of = hsgd_sizes_of(state, fed)
+    sizes = sizes_of(train.compression_k, train.quantization_bits)
+    P, Q = fed.global_interval, fed.local_interval
+    M = fed.num_groups
+
+    w = base_w.copy()
+    losses: List[np.ndarray] = []
+    times: List[float] = []
+    history: List[Dict[str, Any]] = []
+    fault_log: List[Dict[str, Any]] = []
+    step = 0
+    lr_scale = 1.0
+    best = float("inf")
+    rollbacks = 0
+    manifest = os.path.join(ckpt_dir, "manifest.json") if ckpt_dir else None
+    have_ckpt = bool(manifest and os.path.exists(manifest))
+
+    def save(tag: str):
+        payload = {
+            "state": state,
+            "losses": (np.concatenate(losses).astype(np.float32)
+                       if losses else np.zeros(0, np.float32)),
+            "times": np.asarray(times, np.float64),
+            "w": np.asarray(w, np.float64),
+        }
+        extra = {
+            "sched": sched.state_dict(),
+            "step": int(step),
+            "lr_scale": float(lr_scale),
+            "best": best if np.isfinite(best) else None,
+            "rollbacks": int(rollbacks),
+            "history": history,
+            "tag": tag,
+        }
+        save_checkpoint(ckpt_dir, payload, step=step, extra=extra)
+
+    def restore():
+        nonlocal state, losses, times, w, step, lr_scale, best, rollbacks, history
+        payload, _, extra = load_checkpoint(ckpt_dir)
+        # back on device before re-entering the donating executors
+        state = jax.tree.map(jax.numpy.asarray, payload["state"])
+        arr = np.asarray(payload["losses"])
+        losses = [arr] if arr.size else []
+        times = list(np.asarray(payload["times"]))
+        w = np.asarray(payload["w"], np.float64)
+        sched.load_state_dict(extra["sched"])
+        step = int(extra["step"])
+        lr_scale = float(extra["lr_scale"])
+        best = float("inf") if extra["best"] is None else float(extra["best"])
+        rollbacks = int(extra["rollbacks"])
+        history = list(extra["history"])
+
+    if resume:
+        if not have_ckpt:
+            raise FileNotFoundError(
+                f"resume requested but no checkpoint at {ckpt_dir!r}")
+        restore()
+
+    while sched.round < rounds:
+        r = sched.round
+        cohort = sched.next_cohort()
+        A = int(cohort.pmask.shape[1])
+        flt = injector.faults(r, M, A, cohort.pmask)
+        if flt.preempt and not resume:
+            raise CoordinatorPreempted(r, ckpt_dir)
+        state = resize_cohort(state, model, data, A)
+        pmask_eff = (cohort.pmask * (1.0 - flt.drop)).astype(np.float32)
+        cohort_eff = cohort._replace(
+            pmask=pmask_eff, counts=pmask_eff.sum(axis=1).astype(np.int64))
+        fn = runner.fault_round_fn(P, Q, A, robust=robust)
+        state, round_losses, flagged = fn(
+            state, data, w.astype(np.float32), _lr_at(train, step) * lr_scale,
+            cohort.idx, pmask_eff, flt.grad_fault, flt.msg_fault)
+        dur = cohort_durations(cohort_eff, sizes, P, Q, t_compute, links)
+        dur = dur * flt.latency_mult
+        w, rec = sched.settle(cohort_eff, dur)
+        # lost/duplicated round updates re-weight the NEXT global aggregation
+        w = w * np.where(flt.lost, 0.0, 1.0) * np.where(flt.dup, 2.0, 1.0)
+        rl = np.asarray(jax.device_get(round_losses))
+        flagged = float(jax.device_get(flagged))
+        fault_log.append({
+            "round": r,
+            "dropped": int(flt.drop.sum()),
+            "grad_faulted": int((np.nan_to_num(flt.grad_fault, nan=1.0) != 0).sum()),
+            "msg_faulted": int((np.nan_to_num(flt.msg_fault, nan=1.0) != 0).sum()),
+            "lost": int(flt.lost.sum()), "dup": int(flt.dup.sum()),
+            "latency_spikes": int((flt.latency_mult > 1.0).sum()),
+            "flagged_updates": flagged,
+            "retries": rec["retries"],
+        })
+        mean_loss = float(np.mean(rl)) if rl.size else float("nan")
+        diverged = (not np.isfinite(mean_loss)
+                    or (np.isfinite(best)
+                        and mean_loss > divergence_factor * max(best, 1e-9)))
+        if monitor and diverged and have_ckpt and rollbacks < max_rollbacks:
+            # both survive the restore (which reloads the checkpoint's older
+            # values): repeated rollbacks to the SAME checkpoint keep
+            # compounding the η shrink instead of retrying at the same rate
+            rb = rollbacks + 1
+            ls = lr_scale * eta_shrink
+            restore()
+            rollbacks, lr_scale = rb, ls
+            fault_log[-1]["rolled_back"] = True
+            continue
+        losses.append(rl)
+        times.extend([sched.now] * P)
+        history.append(rec)
+        step += P
+        if np.isfinite(mean_loss):
+            best = min(best, mean_loss)
+        if ckpt_dir and ckpt_every and sched.round % ckpt_every == 0:
+            save(f"round-{sched.round}")
+            have_ckpt = True
+
+    final = np.concatenate(losses) if losses else np.zeros(0)
+    return {
+        "losses": final,
+        "times": np.asarray(times),
+        "history": history,
+        "fault_log": fault_log,
+        "staleness_hist": dict(sched.stale_hist),
+        "sim_seconds": sched.now,
+        "runner": runner,
+        "state": state,
+        "injector": injector,
+        "rollbacks": rollbacks,
+        "lr_scale": lr_scale,
+        "recovered": bool(final.size and np.isfinite(final[-1])),
     }
 
 

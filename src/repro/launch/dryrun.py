@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.common.config import INPUT_SHAPES, get_config
+from repro.common.io import atomic_write_json
 from repro.common.sharding import mesh_context
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import LONG_CTX_OK, build_programs, build_shardings
@@ -206,8 +207,7 @@ def main(argv=None):
                     res = {"arch": arch, "shape": shape, "multi_pod": mp,
                            "status": "error", "error": str(e)[-2000:]}
                     failures.append(key)
-                with open(path, "w") as f:
-                    json.dump(res, f, indent=1)
+                atomic_write_json(path, res)
     if failures:
         print("FAILURES:", failures)
         sys.exit(1)

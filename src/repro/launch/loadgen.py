@@ -27,6 +27,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.common.io import atomic_write_json
+
 
 @dataclass
 class TraceRequest:
@@ -63,8 +65,7 @@ def poisson_trace(n: int, rate: float, prompt_len: int, max_new: int,
 
 
 def save_trace(path: str, trace: List[TraceRequest]) -> None:
-    with open(path, "w") as f:
-        json.dump([asdict(r) for r in trace], f)
+    atomic_write_json(path, [asdict(r) for r in trace], indent=None)
 
 
 def load_trace(path: str) -> List[TraceRequest]:

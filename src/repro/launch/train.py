@@ -55,6 +55,8 @@ def run_ehealth(args) -> dict:
         alpha=args.alpha,
         local_interval=args.q,
         global_interval=args.p,
+        robust_agg=args.robust_agg,
+        trim_frac=args.trim_frac,
     )
     train = TrainConfig(
         learning_rate=args.lr,
@@ -131,13 +133,34 @@ def run_ehealth(args) -> dict:
     return m
 
 
+def _fault_plan_of(args):
+    """The CLI's FaultPlan, or None when every fault knob is at its default
+    (fault-free runs stay on the plain population executors)."""
+    from repro.core.faults import FaultPlan
+
+    plan = FaultPlan(
+        seed=args.fault_seed if args.fault_seed is not None else args.seed,
+        dropout_rate=args.fault_dropout,
+        nan_rate=args.fault_nan,
+        outlier_rate=args.fault_outlier,
+        msg_corrupt_rate=args.fault_msg_corrupt,
+        msg_loss_rate=args.fault_msg_loss,
+        msg_dup_rate=args.fault_msg_dup,
+        latency_spike_rate=args.fault_latency,
+        preempt_round=args.preempt_round,
+    )
+    return None if plan.empty else plan
+
+
 def _run_population_cli(args, model, fed, train, data) -> dict:
     """Population-scale cohort run (ROADMAP item 1): simulated device fleet,
-    per-round cohort sampling, sync / semi-async / adaptive wall-clock modes."""
+    per-round cohort sampling, sync / semi-async / adaptive wall-clock modes.
+    Any fault/checkpoint/resume flag routes to the resilient runtime."""
     from repro.core.population import (
         PopulationConfig,
         run_population,
         run_population_adaptive,
+        run_population_resilient,
     )
 
     pop = PopulationConfig(
@@ -147,8 +170,53 @@ def _run_population_cli(args, model, fed, train, data) -> dict:
         deadline_quantile=args.deadline_quantile,
         staleness_damping=args.staleness_damping,
         max_staleness=args.max_staleness,
+        min_quorum=args.min_quorum,
+        max_retries=args.max_retries,
+        backoff_factor=args.backoff_factor,
     )
+    plan = _fault_plan_of(args)
+    resilient = plan is not None or args.ckpt_every > 0 or args.resume
     t0 = time.time()
+    if resilient:
+        if args.population == "adaptive":
+            raise SystemExit(
+                "--population adaptive does not combine with fault injection /"
+                " checkpoint-resume; use sync or semi_async")
+        res = run_population_resilient(
+            model, fed, train, data, pop, rounds=args.rounds,
+            faults=plan, mode=args.population, robust=not args.no_defense,
+            t_compute=args.t_compute, ckpt_dir=args.checkpoint,
+            ckpt_every=args.ckpt_every, resume=args.resume,
+        )
+        fl = res["fault_log"]
+        out = {
+            "mode": args.population,
+            "trace_seed": pop.seed,
+            "steps": int(len(res["losses"])),
+            "loss_first": float(res["losses"][0]),
+            "loss_last": float(res["losses"][-1]),
+            "sim_seconds": res["sim_seconds"],
+            "recovered": res["recovered"],
+            "rollbacks": res["rollbacks"],
+            "devices_dropped": int(sum(r["dropped"] for r in fl)),
+            "grad_faults": int(sum(r["grad_faulted"] for r in fl)),
+            "msg_faults": int(sum(r["msg_faulted"] for r in fl)),
+            "updates_flagged": float(sum(r["flagged_updates"] for r in fl)),
+            "round_retries": int(sum(r["retries"] for r in fl)),
+            "executors_compiled": len(res["runner"]._round_cache),
+            "wall_s": round(time.time() - t0, 2),
+        }
+        print(json.dumps(out, indent=1))
+        if args.fault_trace:
+            res["injector"].save_trace(args.fault_trace)
+            print(f"fault trace -> {args.fault_trace}")
+        if args.checkpoint and args.ckpt_every == 0:
+            # no periodic cadence: persist the final state the classic way
+            save_checkpoint(args.checkpoint, res["state"],
+                            step=len(res["losses"]),
+                            extra={"sim_seconds": res["sim_seconds"]})
+            print(f"checkpoint -> {args.checkpoint}")
+        return out
     if args.population == "adaptive":
         acfg = AdaptiveConfig(
             total_steps=args.rounds * fed.global_interval,
@@ -253,6 +321,33 @@ def run_llm(args) -> dict:
     return out
 
 
+def _validate_args(ap, args):
+    """Fail fast, at the CLI boundary, with an argparse error — not deep in
+    a dataclass __post_init__ after data generation and model init."""
+    for flag in ("fault_dropout", "fault_nan", "fault_outlier",
+                 "fault_msg_corrupt", "fault_msg_loss", "fault_msg_dup",
+                 "fault_latency"):
+        v = getattr(args, flag)
+        if not 0.0 <= v <= 1.0:
+            ap.error(f"--{flag.replace('_', '-')} must be in [0, 1], got {v}")
+    if args.max_retries < 0:
+        ap.error(f"--max-retries must be >= 0, got {args.max_retries}")
+    if args.backoff_factor <= 1.0:
+        ap.error(f"--backoff-factor must be > 1, got {args.backoff_factor}")
+    if not 0.0 <= args.min_quorum <= 1.0:
+        ap.error(f"--min-quorum must be in [0, 1], got {args.min_quorum}")
+    if not 0.0 <= args.trim_frac < 0.5:
+        ap.error(f"--trim-frac must be in [0, 0.5), got {args.trim_frac}")
+    if args.preempt_round < -1:
+        ap.error(f"--preempt-round must be >= 0 (or -1 = never), "
+                 f"got {args.preempt_round}")
+    if args.ckpt_every < 0:
+        ap.error(f"--ckpt-every must be >= 0, got {args.ckpt_every}")
+    if (args.resume or args.ckpt_every > 0) and not args.checkpoint:
+        ap.error("--resume/--ckpt-every need --checkpoint <dir> to hold the "
+                 "checkpoints")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default=None, choices=["paper-cnn", "paper-lstm"])
@@ -310,9 +405,54 @@ def main(argv=None):
                          "population governor")
     ap.add_argument("--trace-seed", type=int, default=None,
                     help="population trace seed (defaults to --seed)")
+    # -- fault-tolerant runtime (population path) ---------------------------
+    ap.add_argument("--robust-agg", default="mean",
+                    choices=["mean", "median", "trimmed"],
+                    help="aggregation over screened device updates when a "
+                         "round flags faults (clean rounds always use the "
+                         "plain masked mean, bit-identically)")
+    ap.add_argument("--trim-frac", type=float, default=0.1,
+                    help="per-side trim fraction for --robust-agg trimmed")
+    ap.add_argument("--no-defense", action="store_true",
+                    help="disable compiled screening + robust aggregation "
+                         "(naive executor; faults hit the plain masked mean)")
+    ap.add_argument("--fault-dropout", type=float, default=0.0,
+                    help="P(device vanishes mid-round)")
+    ap.add_argument("--fault-nan", type=float, default=0.0,
+                    help="P(device emits NaN gradients in a round)")
+    ap.add_argument("--fault-outlier", type=float, default=0.0,
+                    help="P(device emits outlier-scaled gradients)")
+    ap.add_argument("--fault-msg-corrupt", type=float, default=0.0,
+                    help="P(group uplink payload bit-flip corrupted)")
+    ap.add_argument("--fault-msg-loss", type=float, default=0.0,
+                    help="P(group round update lost)")
+    ap.add_argument("--fault-msg-dup", type=float, default=0.0,
+                    help="P(group round update duplicated)")
+    ap.add_argument("--fault-latency", type=float, default=0.0,
+                    help="P(group link stalls for a round)")
+    ap.add_argument("--preempt-round", type=int, default=-1,
+                    help="coordinator dies at this round (-1 = never); "
+                         "resume with --resume from the --checkpoint dir")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault schedule seed (defaults to --seed)")
+    ap.add_argument("--fault-trace", default=None,
+                    help="write the realized fault schedule to this JSON file")
+    ap.add_argument("--min-quorum", type=float, default=0.5,
+                    help="semi-async: fraction of the cohort that must land "
+                         "on time before the deadline stops extending")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="semi-async: deadline re-extensions per round")
+    ap.add_argument("--backoff-factor", type=float, default=2.0,
+                    help="semi-async: deadline multiplier per retry (> 1)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint state + ledgers to --checkpoint every N "
+                         "rounds (0 = only a final checkpoint)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a --population run from the --checkpoint dir")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    _validate_args(ap, args)
     if args.arch:
         return run_llm(args)
     if not args.model:

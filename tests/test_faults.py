@@ -1,0 +1,475 @@
+"""Fault-tolerant federation runtime (ROADMAP robustness item): seeded
+injection + trace replay, the compiled screening/robust-aggregation defense,
+scheduler retry/backoff, and checkpoint-rollback / preemption recovery."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import compile_guard
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.faults import FaultInjector, FaultPlan
+from repro.core.hsgd import HSGDRunner, init_state, resize_cohort
+from repro.core.population import (
+    Cohort,
+    CoordinatorPreempted,
+    DeviceRegistry,
+    PopulationConfig,
+    PopulationScheduler,
+    run_population,
+    run_population_resilient,
+)
+from repro.data.partition import hybrid_partition
+from repro.data.synthetic import ORGANAMNIST, make_dataset
+from repro.models.split_model import cnn_hybrid
+
+
+def _mini(M=3, K=16, q=1, p=2, robust_agg="median"):
+    fed = FederationConfig(num_groups=M, devices_per_group=K, alpha=0.5,
+                           local_interval=q, global_interval=p,
+                           robust_agg=robust_agg)
+    X, y = make_dataset(ORGANAMNIST, M * K, seed=0)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    model = cnn_hybrid(h_rows=11)
+    return model, fed, data
+
+
+def _np_data(M=3, K=16):
+    _, _, data = _mini(M=M, K=K)
+    return {k: np.asarray(v) for k, v in data.items()}
+
+
+POP = PopulationConfig(seed=7, devices_per_group=24, target_cohort=4,
+                       period=100.0)
+
+PLAN = FaultPlan(seed=11, dropout_rate=0.15, nan_rate=0.12,
+                 outlier_rate=0.08, msg_corrupt_rate=0.2)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / config validation (satellite: fail fast on bad knobs)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_validates_rates_and_empty_property():
+    assert FaultPlan().empty
+    assert not PLAN.empty
+    assert not FaultPlan(preempt_round=0).empty
+    with pytest.raises(ValueError):
+        FaultPlan(dropout_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(nan_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(latency_spike_mult=0.5)
+    with pytest.raises(ValueError):
+        FaultPlan(preempt_round=-3)
+
+
+def test_population_config_validates_retry_knobs():
+    with pytest.raises(ValueError):
+        PopulationConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        PopulationConfig(backoff_factor=1.0)
+    with pytest.raises(ValueError):
+        PopulationConfig(min_quorum=1.2)
+
+
+def test_federation_config_validates_robust_agg():
+    with pytest.raises(ValueError):
+        FederationConfig(robust_agg="mode")
+    with pytest.raises(ValueError):
+        FederationConfig(trim_frac=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Injector: one seed -> one schedule; JSON trace replays verbatim
+# ---------------------------------------------------------------------------
+
+
+def test_injector_deterministic_from_seed_and_dropped_never_grad_fault():
+    a, b = FaultInjector(PLAN), FaultInjector(PLAN)
+    pmask = np.ones((3, 8), np.float32)
+    pmask[1, 5:] = 0.0  # padding slots take no faults
+    saw_fault = False
+    for r in range(6):
+        fa, fb = a.faults(r, 3, 8, pmask), b.faults(r, 3, 8, pmask)
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # a dropped device's update never reaches the server: it can't ALSO
+        # poison the aggregate with a faulty gradient
+        assert not np.any((fa.drop > 0)
+                          & (np.nan_to_num(fa.grad_fault, nan=1.0) != 0))
+        assert not np.any(fa.drop[pmask == 0])
+        assert not np.any(np.nan_to_num(fa.grad_fault, nan=1.0)[pmask == 0])
+        saw_fault = saw_fault or fa.any_device_fault
+    assert saw_fault  # the rates above actually realize faults in 6 rounds
+    other = FaultInjector(dataclasses.replace(PLAN, seed=12)).faults(0, 3, 8)
+    first = FaultInjector(PLAN).faults(0, 3, 8)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(first, other))
+
+
+def test_trace_roundtrip_replays_verbatim_including_nan(tmp_path):
+    inj = FaultInjector(PLAN)
+    drawn = [inj.faults(r, 3, 8) for r in range(5)]
+    path = str(tmp_path / "faults.json")
+    inj.save_trace(path)
+    replay = FaultInjector.from_trace(path)
+    assert replay.plan == PLAN
+    for r, rf in enumerate(drawn):
+        rr = replay.faults(r, 3, 8)
+        for x, y in zip(rf, rr):  # assert_array_equal treats NaN == NaN
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # bucket-shape mismatch: the replay crops/pads onto the asked-for shape
+    small = replay.faults(0, 2, 4)
+    np.testing.assert_array_equal(small.drop, drawn[0].drop[:2, :4])
+    big = replay.faults(0, 3, 16)
+    np.testing.assert_array_equal(big.drop[:, :8], drawn[0].drop)
+    assert not big.drop[:, 8:].any() and (big.latency_mult >= 1.0).all()
+    # a round past the recorded trace is clean, not an error
+    assert not replay.faults(99, 3, 8).any_device_fault
+
+
+# ---------------------------------------------------------------------------
+# Compiled defense: screening + robust aggregation inside the executor
+# ---------------------------------------------------------------------------
+
+
+def _fault_setup(robust_agg="median"):
+    model, fed, data = _mini(robust_agg=robust_agg)
+    train = TrainConfig(learning_rate=0.05)
+    runner = HSGDRunner(model, fed, train)
+    reg = DeviceRegistry({k: np.asarray(v) for k, v in data.items()},
+                         PopulationConfig(seed=3, devices_per_group=16,
+                                          target_cohort=4, period=100.0))
+    cohort = reg.sample_cohort(0, 0.0)
+    A = int(cohort.pmask.shape[1])
+    state = resize_cohort(init_state(jax.random.PRNGKey(0), model, fed, data),
+                          model, data, A)
+    return model, fed, data, train, runner, cohort, state, A
+
+
+def _finite_state(state):
+    return all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(state))
+
+
+def test_screen_survives_nan_outlier_and_corrupt_uplink():
+    model, fed, data, train, runner, cohort, state, A = _fault_setup()
+    M = fed.num_groups
+    grad_fault = np.zeros((M, A), np.float32)
+    grad_fault[0, 0] = np.nan    # sick client
+    grad_fault[1, 1] = 1e4       # wildly-scaled update
+    msg_fault = np.zeros(M, np.float32)
+    msg_fault[2] = np.nan        # corrupted compressed uplink
+    fn = runner.fault_round_fn(2, 1, A, robust=True)
+    w = np.ones(M, np.float32) / M
+    state, losses, flagged = fn(state, data, w, 0.05, cohort.idx,
+                                cohort.pmask, grad_fault, msg_fault)
+    assert _finite_state(state)
+    assert np.isfinite(np.asarray(losses)).all()
+    assert float(flagged) > 0  # the screen actually rejected slot-updates
+
+
+def test_naive_executor_is_poisoned_by_the_same_faults():
+    model, fed, data, train, runner, cohort, state, A = _fault_setup()
+    M = fed.num_groups
+    grad_fault = np.zeros((M, A), np.float32)
+    grad_fault[0, 0] = np.nan
+    fn = runner.fault_round_fn(2, 1, A, robust=False)
+    w = np.ones(M, np.float32) / M
+    state, _, flagged = fn(state, data, w, 0.05, cohort.idx,
+                           cohort.pmask, grad_fault, np.zeros(M, np.float32))
+    assert float(flagged) == 0.0  # no defense on the naive path
+    assert not _finite_state(state)  # NaN propagates through the global agg
+
+
+def test_robust_aggregate_all_trusted_is_bitwise_masked_mean():
+    rng = np.random.RandomState(0)
+    x = {"w": jnp.asarray(rng.randn(3, 4, 5).astype(np.float32)),
+         "b": jnp.asarray(rng.randn(3, 4).astype(np.float32))}
+    pmask = jnp.asarray(np.array([[1, 1, 0, 0], [1, 1, 1, 1], [1, 0, 0, 0]],
+                                 np.float32))
+    trust = jnp.ones((3, 4), jnp.float32)
+    plain = F.local_aggregate(x, pmask)
+    for method in ("mean", "median", "trimmed"):
+        rob = F.robust_local_aggregate(x, pmask, trust, method=method,
+                                       trim_frac=0.2)
+        for a, b in zip(jax.tree_util.tree_leaves(rob),
+                        jax.tree_util.tree_leaves(plain)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_robust_aggregate_ignores_flagged_slot():
+    x = np.zeros((2, 4, 3), np.float32)
+    x[0] = np.arange(4, dtype=np.float32)[:, None]  # slots 0..3
+    x[0, 3] = 1e8                                   # poisoned slot
+    pmask = jnp.ones((2, 4), jnp.float32)
+    trust = np.ones((2, 4), np.float32)
+    trust[0, 3] = 0.0
+    out = np.asarray(F.robust_local_aggregate(
+        {"w": jnp.asarray(x)}, pmask, jnp.asarray(trust), method="mean")["w"])
+    np.testing.assert_allclose(out[0], 1.0, rtol=1e-6)  # mean of 0,1,2
+    np.testing.assert_allclose(out[1], 0.0, atol=0)     # untouched group: plain
+
+
+# ---------------------------------------------------------------------------
+# Fault-free parity: empty plan + armed screen == the plain cohort stack,
+# bit-identical parameters, one compile per bucket (compile_guard-pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_free_parity_robust_vs_plain_executor():
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    with compile_guard(track=r"hsgd_(cohort|robust)_round") as g:
+        ref = run_population(model, fed, train, data, POP, rounds=4)
+        res = run_population_resilient(model, fed, train, data, POP, rounds=4,
+                                       faults=None, robust=True, monitor=False)
+    # one XLA compile per cohort bucket per stack — arming the screen and the
+    # robust aggregation costs zero extra compiles
+    buckets = ({h["bucket"] for h in ref["history"]},
+               {h["bucket"] for h in res["history"]})
+    assert g.total == len(buckets[0]) + len(buckets[1]), g.by_name
+    assert len(res["runner"]._round_cache) == len(buckets[1])
+    # the PARAMETER trajectory is bit-identical; the reported loss scalar may
+    # differ in the final ULP (XLA fuses the cross-group mean differently)
+    np.testing.assert_allclose(ref["losses"], res["losses"], rtol=1e-6, atol=0)
+    for a, b in zip(jax.tree_util.tree_leaves(ref["state"]),
+                    jax.tree_util.tree_leaves(res["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert sum(r["flagged_updates"] for r in res["fault_log"]) == 0.0
+    np.testing.assert_array_equal(ref["times"], res["times"])
+
+
+def test_robust_recovers_where_naive_diverges():
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    naive = run_population_resilient(model, fed, train, data, POP, rounds=4,
+                                     faults=PLAN, robust=False, monitor=False)
+    robust = run_population_resilient(model, fed, train, data, POP, rounds=4,
+                                      faults=PLAN, robust=True, monitor=False)
+    assert not naive["recovered"]  # NaN gradients poison the naive stack
+    assert robust["recovered"]
+    assert np.isfinite(robust["losses"]).all()
+    assert _finite_state(robust["state"])
+    assert sum(r["flagged_updates"] for r in robust["fault_log"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# Scheduler retry/backoff (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+
+def _sched(mode="semi_async", **kw):
+    cfg = PopulationConfig(seed=0, devices_per_group=8, target_cohort=4,
+                           period=100.0, deadline_quantile=0.5, **kw)
+    reg = DeviceRegistry(_np_data(), cfg)
+    return PopulationScheduler(reg, np.ones(reg.num_groups), mode=mode)
+
+
+def _cohort(M=3, A=4):
+    return Cohort(idx=np.zeros((M, A), np.int64),
+                  pmask=np.ones((M, A), np.float32),
+                  counts=np.full(M, A, np.int64),
+                  dev_tail=np.ones(M), comp_tail=np.ones(M))
+
+
+def test_retry_backoff_extends_deadline_and_charges_the_clock():
+    sched = _sched(min_quorum=0.9, max_retries=2, backoff_factor=2.0)
+    dur = np.array([8.0, 9.0, 100.0])  # quantile(0.5) strands the last group
+    w, rec = sched.settle(_cohort(), dur)
+    assert rec["retries"] == 2  # 9 -> 18 -> 36, quorum still unmet, give up
+    assert rec["deadline"] == pytest.approx(36.0)
+    assert rec["retry_seconds"] == pytest.approx(27.0)
+    assert sched.now == pytest.approx(36.0)  # retry time is realized sim time
+    # the straggler went down the usual staleness path
+    np.testing.assert_array_equal(sched.staleness, [0, 0, 1])
+    assert w[0] == w[1] > w[2]
+
+
+def test_retry_backoff_caps_at_the_slowest_participant():
+    sched = _sched(min_quorum=1.0, max_retries=5, backoff_factor=10.0)
+    dur = np.array([1.0, 9.0, 10.0])
+    _, rec = sched.settle(_cohort(), dur)
+    assert rec["retries"] == 1
+    assert rec["deadline"] == pytest.approx(10.0)  # min(10 * 1e1, worst)
+    np.testing.assert_array_equal(sched.staleness, [0, 0, 0])
+
+
+def test_no_retry_when_quorum_met_or_mode_sync():
+    sched = _sched(min_quorum=0.5, max_retries=2)
+    _, rec = sched.settle(_cohort(), np.array([8.0, 9.0, 100.0]))
+    assert rec["retries"] == 0 and rec["retry_seconds"] == 0.0
+    sync = _sched(mode="sync", min_quorum=0.9, max_retries=2)
+    _, rec = sync.settle(_cohort(), np.array([8.0, 9.0, 100.0]))
+    assert rec["retries"] == 0  # sync waits for the slowest: nothing to retry
+    assert rec["deadline"] == pytest.approx(100.0)
+
+
+def test_scheduler_state_dict_roundtrip():
+    a = _sched()
+    for dur in ([3.0, 5.0, 7.0], [2.0, 60.0, 80.0]):
+        a.settle(_cohort(), np.array(dur))
+    b = _sched()
+    b.load_state_dict(a.state_dict())
+    assert b.now == a.now and b.round == a.round
+    np.testing.assert_array_equal(b.staleness, a.staleness)
+    assert b.stale_hist == a.stale_hist
+
+
+def test_controller_core_state_dict_roundtrip():
+    from repro.core.comm_model import MessageSizes
+    from repro.core.controller import AdaptiveConfig, ControllerCore
+
+    sizes_of = lambda k, b: MessageSizes(1e5, 1e4, 1e4, 1e3, 1e3, 4)
+    fed = FederationConfig(local_interval=1, global_interval=2)
+    core = ControllerCore(AdaptiveConfig(total_steps=32), fed, sizes_of,
+                          eta0=0.05)
+    plan, _ = core.plan()
+    P = plan.P
+    stats = {"loss": np.full(P, 0.5, np.float32),
+             "gnorm2": np.full(P, 1.0, np.float32),
+             "delta2": np.full(P, 0.5, np.float32),
+             "rho": np.full(P, 1.0, np.float32),
+             "rho_ok": np.ones(P, np.float32)}
+    core.record(plan, stats, seconds=3.0)
+    clone = ControllerCore(AdaptiveConfig(total_steps=32), fed, sizes_of,
+                           eta0=0.05)
+    clone.load_state_dict(core.state_dict())
+    assert clone.steps_done == core.steps_done
+    assert clone.bytes_spent == core.bytes_spent
+    assert clone.seconds_spent == core.seconds_spent
+    p1, r1 = core.plan()
+    p2, r2 = clone.plan()
+    assert p1 == p2 and r1 == r2
+
+
+# ---------------------------------------------------------------------------
+# Recovery: atomic checkpoints, torn saves, preemption resume (tentpole 4)
+# ---------------------------------------------------------------------------
+
+
+def test_torn_save_leaves_previous_checkpoint_loadable(tmp_path, monkeypatch):
+    from repro.checkpoint import ckpt as C
+
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, {"w": np.arange(4.0)}, step=1, extra={"tag": "one"})
+
+    def torn(path, doc, **kw):  # die between the arrays write and the commit
+        raise RuntimeError("preempted mid-save")
+
+    monkeypatch.setattr(C, "atomic_write_json", torn)
+    with pytest.raises(RuntimeError):
+        save_checkpoint(d, {"w": np.arange(4.0) * 7}, step=2,
+                        extra={"tag": "two"})
+    monkeypatch.undo()
+    payload, step, extra = load_checkpoint(d)  # previous ckpt still commits
+    assert step == 1 and extra["tag"] == "one"
+    np.testing.assert_array_equal(payload["w"], np.arange(4.0))
+    # ...and the next successful save prunes the orphaned arrays file
+    save_checkpoint(d, {"w": np.arange(4.0) * 9}, step=3, extra={"tag": "3"})
+    payload, step, _ = load_checkpoint(d)
+    assert step == 3
+    np.testing.assert_array_equal(payload["w"], np.arange(4.0) * 9)
+
+
+def test_preemption_resume_is_bit_identical(tmp_path):
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    ref = run_population_resilient(model, fed, train, data, POP, rounds=5,
+                                   faults=PLAN, robust=True, monitor=False)
+    plan = dataclasses.replace(PLAN, preempt_round=3)
+    d = str(tmp_path / "ck")
+    with pytest.raises(CoordinatorPreempted) as ei:
+        run_population_resilient(model, fed, train, data, POP, rounds=5,
+                                 faults=plan, robust=True, monitor=False,
+                                 ckpt_dir=d, ckpt_every=1)
+    assert ei.value.round_idx == 3 and ei.value.ckpt_dir == d
+    res = run_population_resilient(model, fed, train, data, POP, rounds=5,
+                                   faults=plan, robust=True, monitor=False,
+                                   ckpt_dir=d, ckpt_every=1, resume=True)
+    # losses, parameters, AND the scheduler/wall-clock ledgers all land
+    # exactly where the uninterrupted run does
+    np.testing.assert_array_equal(ref["losses"], res["losses"])
+    np.testing.assert_array_equal(ref["times"], res["times"])
+    assert ref["sim_seconds"] == res["sim_seconds"]
+    assert ref["staleness_hist"] == res["staleness_hist"]
+    for a, b in zip(jax.tree_util.tree_leaves(ref["state"]),
+                    jax.tree_util.tree_leaves(res["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res["recovered"]
+
+
+def test_resume_without_checkpoint_is_an_error(tmp_path):
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    with pytest.raises(FileNotFoundError):
+        run_population_resilient(model, fed, train, data, POP, rounds=2,
+                                 ckpt_dir=str(tmp_path / "none"), resume=True)
+
+
+def test_divergence_monitor_rolls_back_and_shrinks_eta(tmp_path):
+    model, fed, data = _mini()
+    train = TrainConfig(learning_rate=0.05)
+    # pathologically tight spike threshold: once a checkpoint exists, every
+    # round trips the monitor, so the loop must roll back to the last
+    # checkpoint with a shrunk eta exactly max_rollbacks times and then
+    # accept progress (never loop forever)
+    res = run_population_resilient(model, fed, train, data, POP, rounds=4,
+                                   faults=None, robust=True, monitor=True,
+                                   ckpt_dir=str(tmp_path / "ck"), ckpt_every=1,
+                                   divergence_factor=1e-9, eta_shrink=0.25,
+                                   max_rollbacks=3)
+    assert res["rollbacks"] == 3
+    assert res["lr_scale"] == pytest.approx(0.25 ** 3)
+    assert any(r.get("rolled_back") for r in res["fault_log"])
+    assert res["recovered"] and np.isfinite(res["losses"]).all()
+
+
+# ---------------------------------------------------------------------------
+# CLI: early flag validation + fault smoke (satellites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("argv", [
+    ["--fault-nan", "1.5"],
+    ["--fault-dropout", "-0.1"],
+    ["--max-retries", "-1"],
+    ["--backoff-factor", "1.0"],
+    ["--min-quorum", "1.5"],
+    ["--trim-frac", "0.6"],
+    ["--preempt-round", "-3"],
+    ["--ckpt-every", "-1"],
+    ["--ckpt-every", "2"],          # checkpoint cadence without --checkpoint
+    ["--resume"],                   # resume without --checkpoint
+])
+def test_cli_rejects_bad_flags_before_any_work(argv):
+    from repro.launch import train as T
+
+    with pytest.raises(SystemExit):
+        T.main(argv)
+
+
+def test_cli_fault_run_end_to_end_with_trace(tmp_path):
+    from repro.launch import train as T
+
+    trace = str(tmp_path / "faults.json")
+    out = T.main([
+        "--algorithm", "hsgd", "--population", "semi_async",
+        "--dataset", "organamnist", "--samples", "48", "--groups", "2",
+        "--devices", "8", "--rounds", "2", "--p", "2", "--q", "1",
+        "--pop-devices", "8", "--cohort", "2", "--seed", "0",
+        "--fault-nan", "0.2", "--fault-dropout", "0.1",
+        "--robust-agg", "median", "--fault-trace", trace,
+    ])
+    assert out["recovered"] and math.isfinite(out["loss_last"])
+    replay = FaultInjector.from_trace(trace)  # the trace round-trips
+    assert replay.plan.nan_rate == pytest.approx(0.2)
+    assert len(replay.trace) == 2

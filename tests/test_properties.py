@@ -455,3 +455,45 @@ def test_round_time_hetero_bracketed_by_tails(dev_tail, compute_tail, comps):
     het = round_time_hetero(sizes, fed, 0.05,
                             dev_tail=dev_tail, compute_tail=compute_tail)
     assert sym <= het <= max(dev_tail, compute_tail) * sym + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance: robust aggregation parity + seeded injection determinism
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(1, 4),
+       st.sampled_from(["mean", "median", "trimmed"]),
+       st.floats(0.0, 0.45), st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_robust_aggregate_full_trust_is_bitwise_masked_mean(
+        M, A, dim, method, trim_frac, seed):
+    """With nothing flagged, every robust method must select the EXACT masked
+    mean — the fault-free path of the screened executor is bit-identical to
+    the plain cohort stack by construction, not merely close."""
+    rng = np.random.RandomState(seed % 2**31)
+    x = {"w": jnp.asarray(rng.randn(M, A, dim).astype(np.float32))}
+    pmask = jnp.asarray((rng.rand(M, A) < 0.7).astype(np.float32))
+    trust = jnp.ones((M, A), jnp.float32)
+    rob = F.robust_local_aggregate(x, pmask, trust, method=method,
+                                  trim_frac=trim_frac)
+    plain = F.local_aggregate(x, pmask)
+    np.testing.assert_array_equal(np.asarray(rob["w"]), np.asarray(plain["w"]))
+
+
+@given(st.integers(0, 2**20), st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.integers(1, 4), st.integers(1, 8), st.integers(0, 12))
+@settings(**SETTINGS)
+def test_fault_injector_deterministic_and_drop_excludes_grad_fault(
+        seed, d_rate, n_rate, M, A, r):
+    from repro.core.faults import FaultInjector, FaultPlan
+
+    plan = FaultPlan(seed=seed, dropout_rate=d_rate, nan_rate=n_rate)
+    fa = FaultInjector(plan).faults(r, M, A)
+    fb = FaultInjector(plan).faults(r, M, A)
+    for x, y in zip(fa, fb):  # NaN == NaN under assert_array_equal
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # a dropped device's update never reaches the server, so it can't also
+    # poison the aggregate with a faulty gradient
+    assert not np.any((fa.drop > 0)
+                      & (np.nan_to_num(fa.grad_fault, nan=1.0) != 0))

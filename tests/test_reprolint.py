@@ -225,6 +225,40 @@ FIXTURES = {
                 loss: float
         """,
     },
+    "RP9": {
+        "bad": """
+            import json
+            def dump_results(path, results):
+                with open(path, "w") as f:
+                    json.dump(results, f, indent=1)
+        """,
+        # .json path constant, even without a visible json.dump
+        "bad2": """
+            def write_manifest(payload):
+                with open("out/manifest.json", "w") as f:
+                    f.write(payload)
+        """,
+        "good": """
+            from repro.common.io import atomic_write_json
+            def dump_results(path, results):
+                atomic_write_json(path, results)
+        """,
+        # staging to a temp file + os.replace commit is the atomic pattern
+        "good2": """
+            import json, os
+            def dump_results(path, results):
+                tmp = path + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(results, f)
+                os.replace(tmp, path)
+        """,
+        # plain text writes that are not run artifacts stay out of scope
+        "good3": """
+            def write_log(path, lines):
+                with open(path, "w") as f:
+                    f.write("\\n".join(lines))
+        """,
+    },
 }
 
 _CASES = [(rid, kind) for rid, fx in FIXTURES.items() for kind in fx]
@@ -245,7 +279,7 @@ def test_fixture_matrix(rule_id, kind):
 
 def test_every_rule_has_fixtures_and_registry_entry():
     assert set(FIXTURES) == set(RULES)
-    assert len(RULES) == 8
+    assert len(RULES) == 9
     for rid, r in RULES.items():
         assert r.id == rid and r.title and r.doc
 
