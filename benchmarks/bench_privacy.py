@@ -1,0 +1,258 @@
+"""Privacy-hardened exchange: utility vs ε at fixed wire bytes + overheads.
+
+The privacy claim (ROADMAP item 3): the fused compression kernel absorbs the
+Gaussian mechanism (per-row L2 clip + noise BEFORE sparsification, so the
+released message is a post-processing of a DP output) at < 10% kernel-pass
+overhead, the σ = 0 / large-clip configuration is BIT-IDENTICAL to the
+non-DP pass, and secure-aggregation masking changes the aggregate by nothing
+at all (fixed-point ring: wrapping int32 sums are exact, so the pairwise
+antisymmetric masks cancel to the bit). This benchmark pins all three and
+sweeps the noise multiplier σ at the paper's C-HSGD operating point
+(k = 0.25, b = 128 — every run ships IDENTICAL bytes) to record the
+loss-vs-ε utility curve into BENCH_privacy.json:
+
+  * baseline      — C-HSGD, no DP, no masking (reference loss + kernel time);
+  * secure        — same trajectory, ring-masked uplinks (bit parity check);
+  * dp @ σ        — fused DP at each ladder σ, (ε, δ) from zCDP composition.
+
+  PYTHONPATH=src python benchmarks/bench_privacy.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import csv_row, setup_experiment
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.io import atomic_write_json
+from repro.core import federation as F
+from repro.core.baselines import make_runner
+from repro.core.compression import compressed_bytes
+from repro.core.controller import epsilon_of, gaussian_rho
+from repro.core.hsgd import init_state, make_group_weights
+from repro.kernels.compress import compress_rows
+
+
+def _timed_ratio(fn_a, fn_b, inner=10, trials=9):
+    """(best seconds of a, best seconds of b, best-b / best-a ratio).
+
+    Each trial times ``inner`` back-to-back dispatches, with the device
+    pipeline drained before the second timestamp — async dispatch would
+    otherwise time the enqueue. The two sides are INTERLEAVED and each keeps
+    its best-of-N region (the quiet-window estimate): single regions on a
+    shared host are ±15% noisy, the same reasoning as ``bench_faults``'s
+    best-of-N, and far noisier than the < 10% margin the acceptance bound
+    allows. Warm-up absorbs compilation."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+
+    def region(fn):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / inner
+
+    ta, tb = [], []
+    for _ in range(trials):
+        ta.append(region(fn_a))
+        tb.append(region(fn_b))
+    return float(min(ta)), float(min(tb)), float(min(tb) / min(ta))
+
+
+def kernel_overhead(args):
+    """Fused kernel pass with vs without the DP stage on one row matrix.
+
+    The workload mirrors ``compress_pytree``'s actual call: a padded ragged
+    row matrix with per-row valid lengths and per-row k. The noise rows are
+    precomputed operands (that is how the exchange path feeds the kernel —
+    the PRNG runs outside), so this isolates the marginal in-kernel cost:
+    one row reduction + one multiply-add."""
+    key = jax.random.PRNGKey(args.seed)
+    kx, kn, kl = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (args.bench_rows, args.bench_cols), jnp.float32)
+    noise = jax.random.normal(kn, x.shape, jnp.float32)
+    row_len = jax.random.randint(kl, (args.bench_rows,), args.bench_cols // 2,
+                                 args.bench_cols + 1, jnp.int32)
+    k = jnp.maximum(1, row_len // 4)
+    clip = jnp.asarray(1.0, jnp.float32)
+    sigma = jnp.asarray(1.0, jnp.float32)
+
+    t_plain, t_dp, ratio = _timed_ratio(
+        lambda: compress_rows(x, k, 128, row_len=row_len),
+        lambda: compress_rows(x, k, 128, row_len=row_len, dp_clip=clip,
+                              dp_sigma=sigma, dp_noise=noise),
+        trials=args.repeats)
+
+    # σ = 0 with a clip above every row norm multiplies by exactly 1.0 and
+    # adds exactly 0.0 — the DP trace must reproduce the non-DP pass bitwise
+    y_plain = jax.block_until_ready(compress_rows(x, k, 128, row_len=row_len))
+    y_dp0 = jax.block_until_ready(
+        compress_rows(x, k, 128, row_len=row_len,
+                      dp_clip=jnp.asarray(1e9, jnp.float32),
+                      dp_sigma=jnp.asarray(0.0, jnp.float32), dp_noise=noise))
+    return {
+        "rows": args.bench_rows, "cols": args.bench_cols,
+        "seconds_plain": t_plain, "seconds_dp": t_dp,
+        "overhead_frac": ratio - 1.0,
+        "sigma0_bit_identical": bool(
+            np.array_equal(np.asarray(y_plain), np.asarray(y_dp0))),
+    }
+
+
+def masking_parity(model, fed, data, seed):
+    """Ring-masked aggregation vs the zero-mask ring pipeline (bitwise) and
+    vs the plain float mean (fixed-point resolution 2^-16 per slot)."""
+    state = init_state(jax.random.PRNGKey(seed), model, fed, data)
+    masks = F.secure_agg_masks(state.theta2, seed, round_idx=0)
+    zeros = jax.tree.map(lambda m: jnp.zeros_like(m), masks)
+    agg_masked = F.secure_local_aggregate(
+        F.secure_mask_uplink(state.theta2, masks), state.theta2)
+    agg_unmasked = F.secure_local_aggregate(
+        F.secure_mask_uplink(state.theta2, zeros), state.theta2)
+    agg_float = F.local_aggregate(state.theta2)
+    bit = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(jax.tree.leaves(agg_masked),
+                              jax.tree.leaves(agg_unmasked)))
+    tol = 2.0 ** -15  # rounding to the ring grid costs <= 2^-17 per slot
+    close = all(np.max(np.abs(np.asarray(a) - np.asarray(b))) <= tol
+                for a, b in zip(jax.tree.leaves(agg_masked),
+                                jax.tree.leaves(agg_float)))
+    return {"masked_sum_bit_identical": bool(bit),
+            "masked_vs_float_within_tol": bool(close), "tolerance": tol}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="organamnist")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--p", type=int, default=2)
+    ap.add_argument("--q", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--samples", type=int, default=256)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--devices", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dp-clip", type=float, default=1.0)
+    ap.add_argument("--sigmas", type=float, nargs="+",
+                    default=[4.0, 2.0, 1.0, 0.5])
+    ap.add_argument("--delta", type=float, default=1e-5)
+    ap.add_argument("--bench-rows", type=int, default=1024)
+    ap.add_argument("--bench-cols", type=int, default=1024)
+    ap.add_argument("--repeats", type=int, default=9,
+                    help="timed trials per configuration (median is kept)")
+    ap.add_argument("--max-overhead", type=float, default=0.10,
+                    help="accepted DP slowdown of the fused kernel pass")
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__),
+                                                  "..", "BENCH_privacy.json"))
+    args = ap.parse_args(argv)
+
+    exp = setup_experiment(dataset=args.dataset, n=args.samples,
+                           groups=args.groups, devices=args.devices,
+                           alpha=0.25, q=args.q, p=args.p, lr=args.lr,
+                           seed=args.seed)
+    model, fed = exp["model"], exp["fed"]
+    runner, eff_fed = make_runner("c-hsgd", model, fed, exp["train"])
+    data = exp["data"]
+    w = make_group_weights(data)
+    lam = eff_fed.lam
+    releases = args.rounds * lam  # one Gaussian release per exchange
+
+    print(f"# loss vs ε at fixed bytes (C-HSGD k=0.25 b=128), {args.dataset}, "
+          f"{args.rounds} rounds x P={args.p}, δ={args.delta}")
+    runs = {}
+
+    def private_run(name, dp_sigma, secure):
+        state = init_state(jax.random.PRNGKey(args.seed), model, eff_fed, data)
+        t0 = time.perf_counter()
+        state, losses = runner.run_private(
+            state, data, w, rounds=args.rounds, seed=args.seed,
+            dp_clip=args.dp_clip if dp_sigma > 0 else 0.0,
+            dp_sigma=dp_sigma, secure_agg=secure)
+        losses = np.asarray(jax.block_until_ready(losses))
+        eps = (epsilon_of(releases * gaussian_rho(dp_sigma), args.delta)
+               if dp_sigma > 0 else None)
+        runs[name] = {
+            "dp_sigma": dp_sigma, "secure_agg": secure, "epsilon": eps,
+            "loss_first": float(losses[0]), "loss_last": float(losses[-1]),
+            "steps": int(len(losses)),
+            "executors_compiled": len(runner._round_cache),
+            "wall_s": round(time.perf_counter() - t0, 3),
+        }
+        return losses
+
+    state0 = init_state(jax.random.PRNGKey(args.seed), model, eff_fed, data)
+    state0, base_losses = runner.run(state0, data, w, rounds=args.rounds)
+    base_losses = np.asarray(jax.block_until_ready(base_losses))
+    runs["baseline"] = {"dp_sigma": 0.0, "secure_agg": False, "epsilon": None,
+                       "loss_first": float(base_losses[0]),
+                       "loss_last": float(base_losses[-1]),
+                       "steps": int(len(base_losses)),
+                       "executors_compiled": len(runner._round_cache),
+                       "wall_s": None}
+    curves = {"baseline": [float(v) for v in base_losses]}
+    sec_losses = private_run("secure", 0.0, True)
+    curves["secure"] = [float(v) for v in sec_losses]
+    for sigma in args.sigmas:
+        losses = private_run(f"dp_sigma_{sigma:g}", sigma, True)
+        curves[f"dp_sigma_{sigma:g}"] = [float(v) for v in losses]
+
+    ko = kernel_overhead(args)
+    mp = masking_parity(model, eff_fed, data, args.seed)
+
+    # every executed configuration shares ONE (P, Q, k, b) bucket; the private
+    # runs add exactly one more executor (the dp/secure variant of the bucket)
+    buckets = 2  # plain c-hsgd round + the private round
+    executors = len(runner._round_cache)
+
+    csv_row("run", "sigma", "epsilon", "loss_last", "executors")
+    for name, r in runs.items():
+        csv_row(name, r["dp_sigma"],
+                None if r["epsilon"] is None else round(r["epsilon"], 3),
+                round(r["loss_last"], 4), r["executors_compiled"])
+    print(f"# DP kernel overhead: {100 * ko['overhead_frac']:.1f}% "
+          f"({ko['seconds_plain'] * 1e3:.2f} -> {ko['seconds_dp'] * 1e3:.2f} ms)")
+
+    n_ref = 1 << 20
+    summary = {
+        "fixed_bytes_per_message": compressed_bytes(n_ref, 0.25, 128) / n_ref,
+        "dp_overhead_frac": ko["overhead_frac"],
+        "dp_overhead_ok": ko["overhead_frac"] < args.max_overhead,
+        "sigma0_bit_identical": ko["sigma0_bit_identical"],
+        "masked_sum_bit_identical": mp["masked_sum_bit_identical"],
+        "masked_vs_float_within_tol": mp["masked_vs_float_within_tol"],
+        "executors_compiled": executors,
+        "executors_match_buckets": executors == buckets,
+        "releases_per_run": releases,
+        "delta": args.delta,
+    }
+    result = {
+        "config": {"dataset": args.dataset, "rounds": args.rounds,
+                   "p": args.p, "q": args.q, "lr": args.lr,
+                   "samples": args.samples, "groups": args.groups,
+                   "devices": args.devices, "seed": args.seed,
+                   "dp_clip": args.dp_clip, "sigmas": list(args.sigmas),
+                   "delta": args.delta, "bench_rows": args.bench_rows,
+                   "bench_cols": args.bench_cols, "repeats": args.repeats,
+                   "max_overhead": args.max_overhead},
+        "summary": summary,
+        "kernel": ko,
+        "masking": mp,
+        "runs": runs,
+        "curves": curves,
+    }
+    atomic_write_json(args.out, result)
+    print(f"# wrote {os.path.abspath(args.out)}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,9 @@ Rules (see README.md for the war stories):
                                 ``checkpoint.register_state_class``
   RP9  torn-artifact-write    — bare ``open(path, "w")`` of a JSON/manifest
                                 run artifact outside an atomic-write helper
+  RP10 unregistered-rng-stream — structured ``default_rng([seed, N, ...])``
+                                seed whose stream index N is not in the
+                                reserved-stream registry
 """
 from __future__ import annotations
 
@@ -715,3 +718,63 @@ def check_torn_artifact_write(ctx: FileContext) -> Iterator[Finding]:
             f"bare open(..., \"w\") of a run artifact ({evidence}) — a crash "
             f"mid-write leaves a torn file; stage to a temp file and commit "
             f"with os.replace (repro.common.io.atomic_write_json)")
+
+
+# ---------------------------------------------------------------------------
+# RP10 — structured RNG seed with an unregistered stream index
+# ---------------------------------------------------------------------------
+
+# The repo's host-side RNG discipline: every independent random subsystem owns
+# ONE stream index in the structured seed ``default_rng([seed, STREAM, ...])``.
+# Two subsystems sharing an index draw CORRELATED values from the same run
+# seed — the secure-aggregation masks, for example, must never correlate with
+# the fault injector's dropout pattern, or "mask cancellation under dropout"
+# quietly tests a measure-zero slice. New streams register here first.
+RESERVED_STREAMS: Dict[int, str] = {
+    0: "population traits / experiment registry (core/population.py)",
+    1: "per-round cohort sampling (core/population.py)",
+    2: "typical-tails straggler model (core/population.py)",
+    3: "fault injection (core/faults.py)",
+    4: "secure-aggregation pairwise masks (core/federation.py)",
+}
+
+
+@rule("RP10", "structured RNG seed uses an unregistered stream index")
+def check_unregistered_rng_stream(ctx: FileContext) -> Iterator[Finding]:
+    """A structured seed ``np.random.default_rng([seed, N, ...])`` carves the
+    run seed into independent streams keyed by N. The index must be an int
+    literal registered in ``RESERVED_STREAMS`` (or a module constant named
+    ``*_STREAM`` that documents its registry entry): an unregistered literal
+    is a silent collision waiting for the next subsystem, and a VARIABLE
+    index defeats the registry entirely — nobody can audit which streams a
+    run actually touches."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if ctx.call_canonical(node) != "numpy.random.default_rng":
+            continue
+        if not node.args or not isinstance(node.args[0], (ast.List, ast.Tuple)):
+            continue
+        elts = node.args[0].elts
+        if len(elts) < 2:
+            continue  # [seed]-only: no stream index to audit
+        stream = elts[1]
+        if isinstance(stream, ast.Constant):
+            if isinstance(stream.value, int) and not isinstance(stream.value, bool) \
+                    and stream.value in RESERVED_STREAMS:
+                continue
+            yield ctx.finding(
+                "RP10", node,
+                f"stream index {stream.value!r} of a structured default_rng "
+                f"seed is not in the reserved-stream registry "
+                f"(analysis/rules.py RESERVED_STREAMS) — register it before "
+                f"use, or two subsystems will draw correlated values")
+        else:
+            name = ctx.dotted(stream)
+            if name is not None and name.split(".")[-1].endswith("_STREAM"):
+                continue  # registered module constant, self-documenting
+            yield ctx.finding(
+                "RP10", node,
+                "stream index of a structured default_rng seed is neither a "
+                "registered int literal nor a *_STREAM constant — the "
+                "reserved-stream registry (analysis/rules.py) cannot audit it")

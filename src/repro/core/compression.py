@@ -45,6 +45,9 @@ def compress_rows_ref(
     k: Union[int, jnp.ndarray],
     levels: int = 0,
     row_len: Optional[jnp.ndarray] = None,
+    dp_clip: Optional[jnp.ndarray] = None,
+    dp_sigma: Optional[jnp.ndarray] = None,
+    dp_noise: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Fused top-k sparsify + b-level quantize over the last axis of ``x``.
 
@@ -52,6 +55,14 @@ def compress_rows_ref(
     per-row no-op). levels <= 1 disables quantization. row_len: optional
     [rows]/[rows,1] int32 valid length for ragged rows — entries at column
     >= row_len are excluded from thresholds/extrema and zeroed in the output.
+
+    Optional fused DP stage (``dp_noise is not None``): each row is L2-clipped
+    to ``dp_clip`` then perturbed with ``dp_sigma * dp_clip * dp_noise`` BEFORE
+    sparsification, so the released message is a post-processing of a Gaussian-
+    mechanism output. ``dp_noise`` [rows, n] is precomputed standard-normal
+    (threaded PRNG outside the kernel) so the Pallas twin and this fallback see
+    identical operands and stay bit-identical; clip/σ are traced scalars. The
+    stage is gated at the Python level: the non-DP trace is unchanged.
 
     This is the jnp fallback used off-TPU and the bit-exact oracle for the
     Pallas kernel (identical op sequence, all reductions in fp32).
@@ -63,6 +74,14 @@ def compress_rows_ref(
     else:
         row_len = jnp.asarray(row_len, jnp.int32).reshape(-1, 1)
         valid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) < row_len
+    if dp_noise is not None:
+        # one extra VMEM-resident op on the row matrix: scale = min(1, C/‖x‖₂)
+        # per row, then add σ·C·noise. With σ=0 and C >= ‖x‖₂ this multiplies
+        # by exactly 1.0 and adds exactly 0.0 — bit-identical to the non-DP
+        # pass (pinned by a property test).
+        nrm2 = jnp.sum(jnp.where(valid, xf * xf, 0.0), axis=-1, keepdims=True)
+        coef = jnp.minimum(1.0, dp_clip / jnp.maximum(jnp.sqrt(nrm2), 1e-12))
+        xf = xf * coef + (dp_sigma * dp_clip) * dp_noise.astype(jnp.float32)
     mag = jnp.where(valid, jnp.abs(xf), 0.0)
     hi = jnp.max(mag, axis=-1, keepdims=True)
     lo = jnp.zeros_like(hi)
@@ -77,12 +96,18 @@ def compress_rows_ref(
         return jnp.where(count >= k, mid, lo), jnp.where(count >= k, hi, mid)
 
     lo, hi = jax.lax.fori_loop(0, N_REFINE, refine, (lo, hi))
-    y = jnp.where(mag >= lo, xf, 0.0)  # keeps >= k entries (exactly k up to ties)
+    kept = (mag >= lo) & valid  # >= k survivors (exactly k up to ties)
+    y = jnp.where(kept, xf, 0.0)
     if levels and levels > 1:
-        qlo = jnp.min(jnp.where(valid, y, jnp.inf), axis=-1, keepdims=True)
-        qhi = jnp.max(jnp.where(valid, y, -jnp.inf), axis=-1, keepdims=True)
+        # Quantize over the SURVIVORS' value range and re-mask zeros after.
+        # Taking extrema over all valid entries (the old grid) anchors qlo at
+        # the row min of the sparsified row, so whenever a kept value is
+        # negative the zeroed entries snap to round((0-qlo)/scale)*scale+qlo
+        # != 0 and quantization silently re-densifies the message.
+        qlo = jnp.min(jnp.where(kept, y, jnp.inf), axis=-1, keepdims=True)
+        qhi = jnp.max(jnp.where(kept, y, -jnp.inf), axis=-1, keepdims=True)
         scale = jnp.maximum(qhi - qlo, 1e-12) / (levels - 1)
-        y = jnp.round((y - qlo) / scale) * scale + qlo
+        y = jnp.where(kept, jnp.round((y - qlo) / scale) * scale + qlo, 0.0)
     return jnp.where(valid, y, 0.0).astype(x.dtype)
 
 
@@ -116,14 +141,21 @@ def topk_sparsify_sort(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
 
 
 def quantize(x: jnp.ndarray, levels: int) -> jnp.ndarray:
-    """Uniform b-level quantize/dequantize per row (last axis)."""
+    """Uniform b-level quantize/dequantize per row (last axis).
+
+    The grid is anchored at zero (points are integer multiples of the row's
+    step), so already-sparsified rows stay sparse: 0 maps to exactly 0. The
+    step is still the row's (max-min)/(levels-1), keeping the error bound at
+    step/2; the zero-anchored grid can spend one extra code at a span edge,
+    which the byte model ignores.
+    """
     if levels <= 1:
         return x
     lo = jnp.min(x, axis=-1, keepdims=True)
     hi = jnp.max(x, axis=-1, keepdims=True)
     scale = jnp.maximum(hi - lo, 1e-12) / (levels - 1)
-    q = jnp.round((x - lo) / scale)
-    return (q * scale + lo).astype(x.dtype)
+    q = jnp.round(x / scale)
+    return (q * scale).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +200,12 @@ COMPRESSION_LADDER = (
     (0.1, 128),
     (0.05, 64),
 )
+
+# DP rung dimension alongside COMPRESSION_LADDER: σ multipliers the privacy
+# governor walks UP (never down within a run) when the projected ε would bust
+# the (ε, δ) budget. σ is a traced kernel operand, so unlike the compression
+# rungs this ladder costs zero extra compiles.
+DP_SIGMA_LADDER = (1.0, 2.0, 4.0, 8.0)
 
 
 def compressed_bytes(n_elements: int, k_frac: float, levels: int, dense_bytes_per_el: int = 4) -> float:

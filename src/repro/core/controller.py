@@ -53,10 +53,13 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.common.buckets import pow2_floor as _pow2_floor
 from repro.common.config import FederationConfig, TrainConfig
 from repro.common.pytree import tree_size
 from repro.core import comm_model as CM
+from repro.core import federation as F
 from repro.core.adaptive import (
     convergence_bound,
     estimate_rho_delta,
@@ -64,7 +67,11 @@ from repro.core.adaptive import (
     strategy2_optimal_interval,
     strategy3_learning_rate,
 )
-from repro.core.compression import COMPRESSION_LADDER, compressed_bytes
+from repro.core.compression import (
+    COMPRESSION_LADDER,
+    DP_SIGMA_LADDER,
+    compressed_bytes,
+)
 from repro.core.hsgd import (
     HSGDRunner,
     HSGDState,
@@ -91,6 +98,13 @@ class AdaptiveConfig:
     ladder: Tuple[Tuple[float, int], ...] = COMPRESSION_LADDER
     init_probe: bool = True         # §VI-B pre-training probe before round 1
     probe_batch: int = 32
+    # -- privacy knobs (DP off unless clip AND sigma are positive) ----------
+    privacy_budget: float = math.inf  # ε: refuse plans whose projection busts it
+    privacy_delta: float = 1e-5       # δ of the (ε, δ) conversion
+    dp_clip: float = 0.0              # per-row L2 clip C of the fused DP stage
+    dp_sigma: float = 0.0             # base noise multiplier (noise std = σ·C)
+    dp_ladder: Tuple[float, ...] = DP_SIGMA_LADDER  # σ multipliers, ratcheted up
+    secure_agg: bool = False          # pairwise-mask the eq. (1) uplink
 
 
 @dataclass(frozen=True)
@@ -104,6 +118,10 @@ class RoundPlan:
     gamma: float              # Γ(P,Q) at the picked settings
     projected_bytes: float    # end-of-run byte projection at these settings
     projected_seconds: float = 0.0  # end-of-run wall-clock projection (0 = unmodeled)
+    dp_rung: int = 0          # index into the DP σ ladder (0 when DP is off)
+    dp_sigma: float = 0.0     # effective noise multiplier this round (0 = off)
+    projected_epsilon: float = 0.0  # end-of-run ε projection (0 = unmodeled)
+    dp_exhausted: bool = False  # True: even the governed plan busts ε — refuse
 
 
 class AdaptiveResult(NamedTuple):
@@ -128,6 +146,28 @@ def ladder_from(compression_k: float, quant_levels: int,
     return ((compression_k, quant_levels),) + tail
 
 
+def gaussian_rho(sigma: float) -> float:
+    """zCDP cost ρ of ONE Gaussian-mechanism release at noise multiplier σ
+    (sensitivity is normalized away by the per-row clip: std = σ·C for
+    sensitivity C, so ρ = 1/(2σ²)). σ ≤ 0 means no noise — infinite cost."""
+    if sigma <= 0.0:
+        return math.inf
+    return 1.0 / (2.0 * sigma * sigma)
+
+
+def epsilon_of(rho: float, delta: float) -> float:
+    """(ε, δ) bound of accumulated zCDP budget ρ: ε = ρ + 2√(ρ·ln(1/δ)).
+
+    zCDP composes additively across rounds (ρ_total = Σ ρ_i), so the ledger
+    stores ρ and converts once at read time — tighter than naive (ε, δ)
+    composition and monotone in both arguments, which the governor relies on."""
+    if rho <= 0.0:
+        return 0.0
+    if not math.isfinite(rho):
+        return math.inf
+    return rho + 2.0 * math.sqrt(rho * math.log(1.0 / delta))
+
+
 def plan_round(
     probe: Dict[str, float],
     steps_done: int,
@@ -139,6 +179,8 @@ def plan_round(
     sizes_of,
     time_of=None,
     seconds_spent: float = 0.0,
+    dp_rung: int = 0,
+    privacy_spent: float = 0.0,
 ) -> RoundPlan:
     """Pure planning step: probes -> (P, Q, η, compression rung).
 
@@ -210,9 +252,38 @@ def plan_round(
         P *= 2
         eta = eta_for(P)
 
+    # privacy governor: each global round releases P/Q = 1 Gaussian-mechanism
+    # message per group-pair (strategy 1), so the run has ceil(T_rem/P) more
+    # releases ahead. Project the end-of-run ε; when it busts the budget, walk
+    # the σ ladder UP (σ is a traced kernel operand — zero extra compiles),
+    # then amortize with a larger P = Q (fewer releases), and only if BOTH are
+    # exhausted refuse the plan outright (dp_exhausted — the caller must stop
+    # training rather than silently overspend ε).
+    dp = cfg.dp_clip > 0.0 and cfg.dp_sigma > 0.0
+    dp_sigma, eps_proj, dp_exhausted = 0.0, 0.0, False
+    if dp:
+        def eps_after(P_: int, dr: int) -> float:
+            releases = math.ceil(T_rem / P_)  # one release per round (Q = P)
+            rho_more = releases * gaussian_rho(cfg.dp_sigma * cfg.dp_ladder[dr])
+            return epsilon_of(privacy_spent + rho_more, cfg.privacy_delta)
+
+        while (eps_after(P, dp_rung) > cfg.privacy_budget
+               and dp_rung < len(cfg.dp_ladder) - 1):
+            dp_rung += 1
+        while (eps_after(P, dp_rung) > cfg.privacy_budget
+               and 2 * P <= min(cfg.max_interval, T_rem)
+               and gamma(2 * P, eta_for(2 * P)) <= cfg.target_bound):
+            P *= 2
+            eta = eta_for(P)
+        dp_sigma = cfg.dp_sigma * cfg.dp_ladder[dp_rung]
+        eps_proj = eps_after(P, dp_rung)
+        dp_exhausted = eps_proj > cfg.privacy_budget
+
     return RoundPlan(P=P, Q=P, eta=eta, rung=rung,
                      gamma=gamma(P, eta), projected_bytes=projected(P, rung),
-                     projected_seconds=projected_s(P, rung))
+                     projected_seconds=projected_s(P, rung),
+                     dp_rung=dp_rung, dp_sigma=dp_sigma,
+                     projected_epsilon=eps_proj, dp_exhausted=dp_exhausted)
 
 
 # neutral probe seed: the first plan degenerates to P = Q = 1 and the online
@@ -277,10 +348,21 @@ class ControllerCore:
         self.rung = 0
         self.eta_prev = eta0
         self.history: List[Dict[str, Any]] = []
+        # (ε, δ) ledger — zCDP ρ accumulates per executed DP round; the σ
+        # rung ratchets up like the compression rung; privacy_exhausted stops
+        # the run BEFORE a budget-busting round executes.
+        self.rho_spent = 0.0
+        self.dp_rung = 0
+        self.privacy_exhausted = False
 
     @property
     def done(self) -> bool:
-        return self.steps_done >= self.cfg.total_steps
+        return self.steps_done >= self.cfg.total_steps or self.privacy_exhausted
+
+    @property
+    def epsilon_spent(self) -> float:
+        """ε of the (ε, δ=cfg.privacy_delta) guarantee spent so far."""
+        return epsilon_of(self.rho_spent, self.cfg.privacy_delta)
 
     def state_dict(self) -> Dict[str, Any]:
         """JSON-able ledger snapshot (everything plan/record mutate) so a
@@ -292,6 +374,9 @@ class ControllerCore:
             "seconds_spent": float(self.seconds_spent),
             "rung": int(self.rung),
             "eta_prev": float(self.eta_prev),
+            "rho_spent": float(self.rho_spent),
+            "dp_rung": int(self.dp_rung),
+            "privacy_exhausted": bool(self.privacy_exhausted),
             "history": [dict(h) for h in self.history],
         }
 
@@ -302,6 +387,10 @@ class ControllerCore:
         self.seconds_spent = float(sd["seconds_spent"])
         self.rung = int(sd["rung"])
         self.eta_prev = float(sd["eta_prev"])
+        # pre-privacy checkpoints carry no ledger — resume with ε = 0 spent
+        self.rho_spent = float(sd.get("rho_spent", 0.0))
+        self.dp_rung = int(sd.get("dp_rung", 0))
+        self.privacy_exhausted = bool(sd.get("privacy_exhausted", False))
         self.history = [dict(h) for h in sd["history"]]
 
     def plan(self) -> Tuple[RoundPlan, Tuple[float, int]]:
@@ -309,8 +398,15 @@ class ControllerCore:
         plan = plan_round(self.probe, self.steps_done, self.bytes_spent,
                           self.rung, self.eta_prev, self.cfg, self.fed,
                           self.sizes_of, time_of=self.time_of,
-                          seconds_spent=self.seconds_spent)
+                          seconds_spent=self.seconds_spent,
+                          dp_rung=self.dp_rung,
+                          privacy_spent=self.rho_spent)
         self.rung = plan.rung  # the ladder is a ratchet: never loosened
+        self.dp_rung = plan.dp_rung  # σ ratchet: never lowered within a run
+        if plan.dp_exhausted:
+            # refuse BEFORE executing: the caller's loop sees done == True and
+            # stops with the (ε, δ) guarantee intact
+            self.privacy_exhausted = True
         return plan, self.cfg.ladder[plan.rung]
 
     def record(self, plan: RoundPlan, stats,
@@ -331,6 +427,9 @@ class ControllerCore:
             seconds = self.time_of(plan.P, plan.rung)
         round_seconds = float(seconds) if seconds is not None else 0.0
         self.seconds_spent += round_seconds
+        if plan.dp_sigma > 0.0:
+            # strategy 1: one Gaussian release per executed round (P/Q = 1)
+            self.rho_spent += (plan.P // plan.Q) * gaussian_rho(plan.dp_sigma)
         rec = {
             "round": len(self.history), "P": plan.P, "Q": plan.Q,
             "eta": plan.eta, "rung": plan.rung,
@@ -342,6 +441,9 @@ class ControllerCore:
             "projected_bytes": plan.projected_bytes,
             "round_seconds": round_seconds, "seconds_total": self.seconds_spent,
             "projected_seconds": plan.projected_seconds,
+            "dp_sigma": plan.dp_sigma, "dp_rung": plan.dp_rung,
+            "epsilon_total": self.epsilon_spent,
+            "projected_epsilon": plan.projected_epsilon,
             "steps_done": self.steps_done,
             "loss_last": float(np.asarray(stats["loss"])[-1]),
         }
@@ -418,14 +520,27 @@ class AdaptiveHSGDRunner:
 
         core = ControllerCore(cfg, self.fed, self._sizes_of(state),
                               eta0=self.train.learning_rate, probe=probe)
+        dp = cfg.dp_clip > 0.0 and cfg.dp_sigma > 0.0
         losses: List[np.ndarray] = []
         while not core.done:
             plan, (k_frac, levels) = core.plan()
+            if core.privacy_exhausted:
+                break  # refused round: executing it would bust the ε budget
             fn = self.runner.round_fn(plan.P, plan.Q, k_frac, levels,
-                                      collect_stats=True)
-            state, stats = fn(state, data, group_weights, plan.eta)
+                                      collect_stats=True,
+                                      dp=dp, secure_agg=cfg.secure_agg)
+            kwargs: Dict[str, Any] = {}
+            if dp:
+                kwargs["dp_clip"] = jnp.asarray(cfg.dp_clip, jnp.float32)
+                kwargs["dp_sigma"] = jnp.asarray(plan.dp_sigma, jnp.float32)
+            if cfg.secure_agg:
+                kwargs["agg_masks"] = F.secure_agg_masks(
+                    state.theta2, self.train.seed, len(core.history))
+            state, stats = fn(state, data, group_weights, plan.eta, **kwargs)
             stats = jax.device_get(stats)
             losses.append(np.asarray(stats["loss"]))
             core.record(plan, stats)
 
-        return AdaptiveResult(state, np.concatenate(losses), core.history)
+        losses_flat = (np.concatenate(losses) if losses
+                       else np.zeros((0,), np.float32))
+        return AdaptiveResult(state, losses_flat, core.history)

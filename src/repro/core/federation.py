@@ -12,10 +12,11 @@ replicated copy per device. On a trivial mesh every constraint is a no-op.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.config import FederationConfig
 from repro.common.sharding import constrain
@@ -56,6 +57,104 @@ def local_aggregate(theta2_active, mask=None):
         return jnp.where(keep, masked, plain)
 
     return _constrain_grouped(jax.tree.map(agg, theta2_active))
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation (pairwise-mask simulation, Bonawitz-style)
+# ---------------------------------------------------------------------------
+
+# Reserved RNG stream index for pairwise masks: default_rng([seed, 4, r, m, i, j]).
+# Streams 0 (registry), 1 (cohort), 2 (typical tails), 3 (faults) are taken —
+# see the reprolint RP10 registry in analysis/rules.py.
+SECURE_AGG_STREAM = 4
+# Fixed-point fractional bits of the ℤ_{2^32} ring encoding. Exact-sum
+# requirement: |Σ_i x_i| · 2^FRAC_BITS < 2^31 per coordinate, comfortably met
+# by O(1)-magnitude parameters over cohorts of <= a few hundred slots.
+SECURE_AGG_FRAC_BITS = 16
+
+
+def secure_agg_masks(template, seed: int, round_idx: int, alive=None):
+    """Pairwise antisymmetric int32 uplink masks for one round (host-side).
+
+    ``template`` is the [M, A, ...] uplink pytree (θ2); the result has the
+    same structure in int32. For each group m and alive pair i < j, a mask
+    ``p`` is drawn from ``np.random.default_rng([seed, 4, round_idx, m, i, j])``
+    (fresh reserved stream index — cannot collide with the registry / cohort /
+    tails / fault streams) and slot i carries +p while slot j carries -p, so
+    the ring sum over the alive slots cancels EXACTLY: integer addition mod
+    2^32 is associative, unlike float. Dropout (PR 9 screening) is handled by
+    re-keying per round over the surviving cohort — pass the survivors as
+    ``alive`` [M, A] and dead slots get (and owe) no masks.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    M, A = leaves[0].shape[:2]
+    if alive is None:
+        alive_np = np.ones((M, A), bool)
+    else:
+        alive_np = np.asarray(alive) > 0
+    nets = [np.zeros(l.shape, np.int64) for l in leaves]
+    for m in range(M):
+        for i in range(A):
+            for j in range(i + 1, A):
+                if not (alive_np[m, i] and alive_np[m, j]):
+                    continue
+                rng = np.random.default_rng(
+                    [seed, SECURE_AGG_STREAM, round_idx, m, i, j])
+                for li, l in enumerate(leaves):
+                    p = rng.integers(-(2**31), 2**31, size=l.shape[2:],
+                                     dtype=np.int64)
+                    nets[li][m, i] += p
+                    nets[li][m, j] -= p
+    masks = [jnp.asarray((n & 0xFFFFFFFF).astype(np.uint32).view(np.int32))
+             for n in nets]
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def _ring_encode(x, frac_bits: int):
+    return jnp.round(x.astype(jnp.float32) * (2.0 ** frac_bits)).astype(jnp.int32)
+
+
+def secure_mask_uplink(theta2_active, masks, frac_bits: int = SECURE_AGG_FRAC_BITS):
+    """Worker-side masking: fixed-point encode the uplink, add the pairwise
+    mask with wrapping int32 addition. The result is what leaves the device —
+    each slot's payload is uniform over the ring (mask-one-time-pad), so a
+    single masked uplink is statistically uninformative about its θ2."""
+    return jax.tree.map(
+        lambda x, m: _ring_encode(x, frac_bits) + m, theta2_active, masks)
+
+
+def secure_local_aggregate(masked_uplink, like, mask=None,
+                           frac_bits: int = SECURE_AGG_FRAC_BITS):
+    """Eq. (1) over ring-masked uplinks: [M, A, ...] int32 -> [M, ...] float.
+
+    The server sums the masked integers along the device axis (wrapping mod
+    2^32 — exact and associative, so the antisymmetric masks cancel to the
+    bit) and only then decodes to float and divides by the participant count.
+    ``like`` supplies the output dtype per leaf; ``mask`` [M, A] restricts the
+    sum to the round's real cohort slots (a group with an empty cohort
+    returns zeros — its global weight is zeroed upstream, matching the
+    ``local_aggregate`` contract). Bit-parity with the unmasked ring pipeline
+    is exact; agreement with the plain float ``local_aggregate`` holds to the
+    2^-frac_bits fixed-point resolution.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(masked_uplink)
+    like_leaves = jax.tree_util.tree_leaves(like)
+    M, A = leaves[0].shape[:2]
+    if mask is None:
+        w = jnp.ones((M, A), jnp.int32)
+    else:
+        w = (mask > 0).astype(jnp.int32)
+    cnt = jnp.sum(w, axis=1)  # [M]
+    safe = jnp.maximum(cnt, 1).astype(jnp.float32)
+    out = []
+    for x, ref in zip(leaves, like_leaves):
+        wb = w.reshape(w.shape + (1,) * (x.ndim - 2))
+        ring_sum = jnp.sum(x * wb, axis=1)  # wrapping int32: masks cancel
+        dec = ring_sum.astype(jnp.float32) / (2.0 ** frac_bits)
+        mean = dec / safe.reshape((-1,) + (1,) * (dec.ndim - 1))
+        keep = (cnt > 0).reshape((-1,) + (1,) * (dec.ndim - 1))
+        out.append(jnp.where(keep, mean, 0.0).astype(ref.dtype))
+    return _constrain_grouped(jax.tree_util.tree_unflatten(treedef, out))
 
 
 def worker_sqnorm(tree, lead: int):
@@ -123,7 +222,7 @@ def _robust_center(x, w, method: str, trim_frac: float):
 
 
 def robust_local_aggregate(theta2_active, pmask, trust, method: str = "median",
-                           trim_frac: float = 0.1):
+                           trim_frac: float = 0.1, agg_masks=None):
     """Eq. (1) under screening: [M, A, ...] -> [M, ...].
 
     ``pmask`` marks the round's real cohort slots, ``trust`` (same shape,
@@ -137,12 +236,22 @@ def robust_local_aggregate(theta2_active, pmask, trust, method: str = "median",
         slots (masked mean / coordinate-wise median / trimmed mean);
       * flagged, no survivors -> the masked-mean fallback (the group is
         poisoned either way; its weight is zeroed upstream).
+
+    ``agg_masks`` routes the clean-path mean through the secure-aggregation
+    ring pipeline. The robust branch still reads the plaintext slots — a
+    simulation privilege: coordinate-wise medians are nonlinear, so a real
+    deployment cannot run them under vanilla pairwise masking and would pair
+    screening with a different primitive.
     """
     w = pmask * trust
     flagged = jnp.sum(pmask * (1.0 - trust), axis=1)  # [M] flagged real slots
     cnt = jnp.sum(w, axis=1)
     use_robust = (flagged > 0) & (cnt > 0)
-    plain = local_aggregate(theta2_active, pmask)
+    if agg_masks is not None:
+        plain = secure_local_aggregate(
+            secure_mask_uplink(theta2_active, agg_masks), theta2_active, pmask)
+    else:
+        plain = local_aggregate(theta2_active, pmask)
 
     def robust_path(_):
         def sel(x_full, x_plain):

@@ -342,6 +342,9 @@ def exchange(
     trust: Optional[jnp.ndarray] = None,
     msg_fault: Optional[jnp.ndarray] = None,
     screen: bool = False,
+    dp_clip=None,
+    dp_sigma=None,
+    agg_masks=None,
 ) -> HSGDState:
     """Local aggregation (eq 1) + A_m/ξ_m agreement + ζ/θ0 exchange.
 
@@ -361,12 +364,29 @@ def exchange(
     to ``robust_local_aggregate`` per ``fed.robust_agg``; ``msg_fault`` ([M],
     0 = clean) multiplies the group's compressed ζ2 uplink (bit-flip
     corruption); ``screen`` zeroes non-finite message entries at the receiver.
+
+    Privacy legs (both gated at the Python level — the plain trace is
+    unchanged): ``dp_clip``/``dp_sigma`` (traced scalars) run the message
+    through the fused per-row clip + Gaussian-noise stage of the compression
+    kernel, drawing the precomputed noise rows from a key split off the
+    threaded state key; ``agg_masks`` (a per-round int32 pytree from
+    ``F.secure_agg_masks``) routes eq. (1) through the pairwise-mask secure-
+    aggregation ring, where the masks cancel exactly in the server sum.
     """
-    key, k_sample = jax.random.split(state.key)
+    dp = dp_clip is not None
+    if dp:  # extra split only on the DP trace: the plain key stream is untouched
+        key, k_sample, k_dp = jax.random.split(state.key, 3)
+    else:
+        key, k_sample = jax.random.split(state.key)
+        k_dp = None
     if trust is not None and pmask is not None:
         theta2_group = F.robust_local_aggregate(  # eq (1) under screening
             state.theta2, pmask, trust,
-            method=fed.robust_agg, trim_frac=fed.trim_frac)
+            method=fed.robust_agg, trim_frac=fed.trim_frac,
+            agg_masks=agg_masks)
+    elif agg_masks is not None:
+        theta2_group = F.secure_local_aggregate(  # eq (1) over masked uplinks
+            F.secure_mask_uplink(state.theta2, agg_masks), state.theta2, pmask)
     else:
         theta2_group = F.local_aggregate(state.theta2, pmask)  # eq (1)
     A = fed.sampled_devices if idx is None else idx.shape[1]
@@ -380,13 +400,19 @@ def exchange(
     z2 = _h2_groups(model, theta2_group, batch["x2"])
     stale_theta0 = state.theta0
 
-    if compression_k or quant_levels:
+    if compression_k or quant_levels or dp:
         msg = {"theta0": stale_theta0, "z1": z1, "z2": z2}
         if fused:
             from repro.kernels.compress import compress_pytree
 
-            msg = compress_pytree(msg, compression_k or 1.0, quant_levels)
+            msg = compress_pytree(msg, compression_k or 1.0, quant_levels,
+                                  dp_clip=dp_clip, dp_sigma=dp_sigma,
+                                  dp_key=k_dp)
         else:
+            if dp:
+                raise ValueError(
+                    "DP is fused into the batched compression kernel; "
+                    "the legacy sort path does not support dp_clip/dp_sigma")
             comp = partial(compress_message_sort, k_frac=compression_k or 1.0,
                            levels=quant_levels)
             msg = jax.tree.map(comp, msg)
@@ -522,7 +548,8 @@ class HSGDRunner:
     def _round_impl(self, state: HSGDState, data, group_weights,
                     lr: Union[Callable, jnp.ndarray, float],
                     Q: int, lam: int, compression_k: float, quant_levels: int,
-                    collect: bool, idx=None, pmask=None):
+                    collect: bool, idx=None, pmask=None,
+                    dp_clip=None, dp_sigma=None, agg_masks=None):
         """One global round with staged scan lengths (Λ intervals × Q steps).
 
         ``lr`` is either a step->η schedule (fixed-interval ``run`` path) or a
@@ -540,6 +567,7 @@ class HSGDRunner:
             exchange, model, data=data, fed=fed,
             compression_k=compression_k, quant_levels=quant_levels,
             fused=self.fused_compression, idx=idx, pmask=pmask,
+            dp_clip=dp_clip, dp_sigma=dp_sigma, agg_masks=agg_masks,
         )
 
         if not collect:
@@ -589,7 +617,8 @@ class HSGDRunner:
         )
 
     def round_fn(self, P: int, Q: int, compression_k: Optional[float] = None,
-                 quant_levels: Optional[int] = None, collect_stats: bool = True):
+                 quant_levels: Optional[int] = None, collect_stats: bool = True,
+                 dp: bool = False, secure_agg: bool = False):
         """Compiled single-round executor for a (P, Q, compression) bucket.
 
         fn(state, data, group_weights, lr) -> (state, stats) with stats a dict
@@ -597,15 +626,38 @@ class HSGDRunner:
         ``collect_stats``, else (state, losses [P]). Donates ``state`` like
         ``run``. Cached per bucket — the adaptive controller's round-varying
         (P, Q, k, b) settings compile once each.
+
+        ``dp``/``secure_agg`` extend the cache key by exactly one enable bit
+        each; the executor then takes extra TRACED operands — fn(state, data,
+        group_weights, lr, dp_clip, dp_sigma[, agg_masks]) — so re-picking
+        clip/σ per round (the controller's DP governor) or re-keying the
+        pairwise masks per round never recompiles, à la traced-η.
         """
         if P < 1 or Q < 1 or P % Q:
             raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
         k = self.train.compression_k if compression_k is None else compression_k
         b = self.train.quantization_bits if quant_levels is None else quant_levels
         key = (P, Q, k, b, collect_stats)
+        if dp or secure_agg:
+            key = key + (dp, secure_agg)
         fn = self._round_cache.get(key)
         if fn is None:
             lam = P // Q
+
+            if dp or secure_agg:
+                @partial(jax.jit, donate_argnums=(0,))
+                def hsgd_private_round(state, data, group_weights, lr,
+                                       dp_clip=None, dp_sigma=None,
+                                       agg_masks=None):
+                    return self._round_impl(
+                        state, data, group_weights, lr, Q, lam, k, b,
+                        collect_stats,
+                        dp_clip=dp_clip if dp else None,
+                        dp_sigma=dp_sigma if dp else None,
+                        agg_masks=agg_masks if secure_agg else None)
+
+                fn = self._round_cache[key] = hsgd_private_round
+                return fn
 
             # named so compile_guard can attribute compiles per executor
             @partial(jax.jit, donate_argnums=(0,))
@@ -787,6 +839,42 @@ class HSGDRunner:
 
         state, losses = go(state, data, group_weights)
         return state, losses.reshape(-1)
+
+    def run_private(self, state: HSGDState, data, group_weights, rounds: int,
+                    seed: int = 0, dp_clip: float = 0.0, dp_sigma: float = 0.0,
+                    secure_agg: bool = False):
+        """Fixed-interval run with the privacy legs on.
+
+        A host round loop instead of ``run``'s scan: the secure-aggregation
+        pairwise masks are host-generated (numpy, stream index 4) and re-keyed
+        every round, which a traced scan cannot express. One executor compiles
+        for the single (P, Q, k, b) bucket — clip/σ/masks are traced operands,
+        so the loop never recompiles. η follows the halving schedule sampled
+        at each round's first step (it is a per-round traced scalar here).
+
+        Returns (state, per-step losses [rounds * P]).
+        """
+        dp = dp_clip > 0.0
+        if dp_sigma > 0.0 and not dp:
+            raise ValueError("dp_sigma > 0 requires a positive dp_clip")
+        Q = self.fed.local_interval
+        P = Q * self.fed.lam
+        fn = self.round_fn(P, Q, collect_stats=False, dp=dp,
+                           secure_agg=secure_agg)
+        lr_fn = halving_schedule(self.train.learning_rate,
+                                 self.train.lr_halve_every)
+        losses, step = [], 0
+        for r in range(rounds):
+            kwargs = {}
+            if dp:
+                kwargs["dp_clip"] = jnp.asarray(dp_clip, jnp.float32)
+                kwargs["dp_sigma"] = jnp.asarray(dp_sigma, jnp.float32)
+            if secure_agg:
+                kwargs["agg_masks"] = F.secure_agg_masks(state.theta2, seed, r)
+            state, l = fn(state, data, group_weights, lr_fn(step), **kwargs)
+            losses.append(l)
+            step += P
+        return state, jnp.concatenate([jnp.reshape(l, (-1,)) for l in losses])
 
 
 def make_group_weights(data) -> jnp.ndarray:

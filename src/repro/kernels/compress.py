@@ -57,6 +57,23 @@ def _compress_kernel(x_ref, k_ref, len_ref, o_ref, *, levels: int):
     ).astype(o_ref.dtype)
 
 
+def _compress_dp_kernel(x_ref, k_ref, len_ref, noise_ref, clip_ref, sigma_ref,
+                        o_ref, *, levels: int):
+    # DP twin: same traced math plus the fused per-row clip+noise stage. The
+    # noise rows ride in VMEM with the same row index map as x (precomputed
+    # standard normals, so the kernel stays deterministic and bit-identical
+    # to the jnp fallback); clip/σ are (1, 1) SMEM-friendly scalar operands.
+    o_ref[...] = compress_rows_ref(
+        x_ref[...],
+        k_ref[...],
+        levels,
+        len_ref[...],
+        dp_clip=clip_ref[0, 0],
+        dp_sigma=sigma_ref[0, 0],
+        dp_noise=noise_ref[...],  # [block_rows, n] standard-normal rows
+    ).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("levels", "block_rows", "interpret"))
 def _fused_compress_call(x, k_arr, len_arr, levels: int, block_rows: int, interpret: bool):
     rows, n = x.shape
@@ -82,6 +99,41 @@ def _fused_compress_call(x, k_arr, len_arr, levels: int, block_rows: int, interp
     return out[:rows]
 
 
+@functools.partial(jax.jit, static_argnames=("levels", "block_rows", "interpret"))
+def _fused_compress_dp_call(x, k_arr, len_arr, noise, clip, sigma,
+                            levels: int, block_rows: int, interpret: bool):
+    # Separate jitted entry so the non-DP call keeps its exact trace (and
+    # executor caches keyed on it stay warm); DP only adds a `dp_enabled` bit
+    # upstream — clip/σ/noise are traced operands, never static.
+    rows, n = x.shape
+    block_rows = min(block_rows, rows)
+    pad_rows = (-rows) % block_rows
+    if pad_rows:
+        x = jnp.pad(x, ((0, pad_rows), (0, 0)))
+        k_arr = jnp.pad(k_arr, ((0, pad_rows), (0, 0)))
+        len_arr = jnp.pad(len_arr, ((0, pad_rows), (0, 0)))
+        noise = jnp.pad(noise, ((0, pad_rows), (0, 0)))
+    grid = (x.shape[0] // block_rows,)
+    clip = jnp.asarray(clip, jnp.float32).reshape(1, 1)
+    sigma = jnp.asarray(sigma, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_compress_dp_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, k_arr, len_arr, noise, clip, sigma)
+    return out[:rows]
+
+
 def fused_compress_pallas(
     x: jnp.ndarray,
     k: Union[int, jnp.ndarray],
@@ -89,6 +141,9 @@ def fused_compress_pallas(
     row_len: Optional[jnp.ndarray] = None,
     block_rows: int = 8,
     interpret: Optional[bool] = None,
+    dp_clip=None,
+    dp_sigma=None,
+    dp_noise: Optional[jnp.ndarray] = None,
 ):
     """x: [rows, n] -> fused-compressed x, same shape/dtype.
 
@@ -96,6 +151,8 @@ def fused_compress_pallas(
     levels: b-level quantization grid size (<= 1 disables).
     row_len: optional per-row valid length for ragged/padded rows.
     interpret: None -> auto-detect (compiled on TPU, interpret elsewhere).
+    dp_noise: optional [rows, n] precomputed standard-normal rows enabling the
+    fused per-row L2-clip (``dp_clip``) + Gaussian noise (``dp_sigma``) stage.
     """
     rows, n = x.shape
     if interpret is None:
@@ -105,6 +162,10 @@ def fused_compress_pallas(
         len_arr = jnp.full((rows, 1), n, jnp.int32)
     else:
         len_arr = jnp.asarray(row_len, jnp.int32).reshape(-1, 1)
+    if dp_noise is not None:
+        return _fused_compress_dp_call(
+            x, k_arr, len_arr, dp_noise.astype(jnp.float32), dp_clip, dp_sigma,
+            int(levels), block_rows, bool(interpret))
     return _fused_compress_call(x, k_arr, len_arr, int(levels), block_rows, bool(interpret))
 
 
@@ -118,6 +179,9 @@ def compress_rows(
     k: Union[int, jnp.ndarray],
     levels: int = 0,
     row_len: Optional[jnp.ndarray] = None,
+    dp_clip=None,
+    dp_sigma=None,
+    dp_noise: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Backend router for the fused compression op.
 
@@ -126,11 +190,16 @@ def compress_rows(
     interpret-mode Pallas is for validation, not the hot path.
     """
     if not default_interpret():
-        return fused_compress_pallas(x, k, levels, row_len, interpret=False)
-    return _compress_rows_ref_jit(x, k, levels=levels, row_len=row_len)
+        return fused_compress_pallas(x, k, levels, row_len, interpret=False,
+                                     dp_clip=dp_clip, dp_sigma=dp_sigma,
+                                     dp_noise=dp_noise)
+    return _compress_rows_ref_jit(x, k, levels=levels, row_len=row_len,
+                                  dp_clip=dp_clip, dp_sigma=dp_sigma,
+                                  dp_noise=dp_noise)
 
 
-def compress_pytree(tree, k_frac: float, levels: int = 0):
+def compress_pytree(tree, k_frac: float, levels: int = 0,
+                    dp_clip=None, dp_sigma=None, dp_key=None):
     """Compress every leaf of a message pytree in ONE batched row-matrix call.
 
     Each leaf is viewed as rows of its trailing axis; rows are padded to the
@@ -138,9 +207,16 @@ def compress_pytree(tree, k_frac: float, levels: int = 0):
     ζ2) costs a single kernel launch instead of one per leaf. Per-leaf k is
     ``max(1, round(k_frac * width))``; ragged masking keeps the result
     bit-identical to compressing each leaf separately.
+
+    ``dp_key`` (a jax PRNG key) enables the fused DP stage: standard-normal
+    noise rows for the whole stacked matrix are drawn once from the threaded
+    key and ride into the kernel as an operand, with per-row L2 clip
+    ``dp_clip`` and noise multiplier ``dp_sigma`` (std = σ·clip) — traced
+    scalars, so re-picking them never recompiles.
     """
     do_topk = 0.0 < k_frac < 1.0
-    if not do_topk and not (levels and levels > 1):
+    dp = dp_key is not None
+    if not do_topk and not (levels and levels > 1) and not dp:
         return tree
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     widths = [int(leaf.shape[-1]) if leaf.ndim else 1 for leaf in leaves]
@@ -154,11 +230,16 @@ def compress_pytree(tree, k_frac: float, levels: int = 0):
         ks.append(jnp.full((r,), k, jnp.int32))
         lens.append(jnp.full((r,), n, jnp.int32))
         counts.append(r)
+    mat = jnp.concatenate(mats, axis=0)
+    noise = jax.random.normal(dp_key, mat.shape, jnp.float32) if dp else None
     out = compress_rows(
-        jnp.concatenate(mats, axis=0),
+        mat,
         jnp.concatenate(ks),
         levels,
         jnp.concatenate(lens),
+        dp_clip=dp_clip,
+        dp_sigma=dp_sigma,
+        dp_noise=noise,
     )
     new_leaves, off = [], 0
     for leaf, n, r in zip(leaves, widths, counts):

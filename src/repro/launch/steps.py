@@ -246,7 +246,8 @@ def make_hsgd_step_stats(model: HybridModel, n_shards: int = 2) -> Callable:
     return step
 
 
-def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: int = 0) -> Callable:
+def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: int = 0,
+                       dp: bool = False) -> Callable:
     """ζ1/ζ2 recompute + θ0 snapshot — the C-HSGD wire message.
 
     The WHOLE {θ0, ζ1, ζ2} message is compressed in one ``compress_pytree``
@@ -254,16 +255,24 @@ def make_exchange_step(model: HybridModel, compression_k: float = 0.0, quant: in
     byte accounting (which bills θ0 as compressed). A previous version
     compressed only ζ1/ζ2 and transmitted θ0 dense, silently diverging from
     the eq. (19) bill on the LLM path.
+
+    ``dp=True`` (a Python-level gate — the plain trace is unchanged) turns on
+    the fused per-row L2-clip + Gaussian-noise stage inside the same kernel
+    call; the step then takes traced ``dp_clip``/``dp_sigma`` scalars and a
+    ``dp_key`` for the precomputed noise rows.
     """
 
-    def exchange(params, batch):
+    def exchange(params, batch, dp_clip=None, dp_sigma=None, dp_key=None):
         z1 = model.h1(params["theta1"], batch["x1"])
         z2 = model.h2(params["theta2"], batch["x2"])
         msg = {"theta0": params["theta0"], "z1": z1, "z2": z2}
-        if compression_k or quant:
+        if compression_k or quant or dp:
             from repro.kernels.compress import compress_pytree
 
-            msg = compress_pytree(msg, compression_k or 1.0, quant)
+            msg = compress_pytree(msg, compression_k or 1.0, quant,
+                                  dp_clip=dp_clip if dp else None,
+                                  dp_sigma=dp_sigma if dp else None,
+                                  dp_key=dp_key if dp else None)
         return msg
 
     return exchange
@@ -489,19 +498,38 @@ class LLMRoundRunner:
 
     def _round_impl(self, params, batches, eta, Q: int, lam: int,
                     compression_k: float, quant_levels: int, collect: bool,
-                    pod_weights=None):
+                    pod_weights=None, dp_clip=None, dp_sigma=None, dp_key=None):
         model = self.model
         if self.n_pods > 1:
             # eq. (2) across pod groups; pod_weights = the population layer's
             # staleness-damped semi-async weights (None = synchronous mean)
             params = make_global_agg()(params, pod_weights)
-        exch = jax.vmap(make_exchange_step(model, compression_k, quant_levels))
+        dp = dp_key is not None
+        if dp:
+            # per-interval, per-pod noise keys folded off the threaded round
+            # key — deterministic, and fresh normals every exchange
+            exch_dp = jax.vmap(
+                make_exchange_step(model, compression_k, quant_levels, dp=True),
+                in_axes=(0, 0, None, None, 0))
+            ikeys = jax.vmap(lambda i: jax.random.fold_in(dp_key, i))(
+                jnp.arange(lam))
+            xs = (batches, ikeys)
+            batch_of = lambda xs_i: xs_i[0]
+            stale_of = lambda params, xs_i: exch_dp(
+                params, xs_i[0], dp_clip, dp_sigma,
+                jax.random.split(xs_i[1], self.n_pods))
+        else:
+            exch = jax.vmap(make_exchange_step(model, compression_k, quant_levels))
+            xs = batches
+            batch_of = lambda xs_i: xs_i
+            stale_of = lambda params, xs_i: exch(params, xs_i)
 
         if not collect:
             step = jax.vmap(make_hsgd_train_step(model), in_axes=(0, 0, 0, None))
 
-            def interval(params, batch_i):
-                stale = exch(params, batch_i)
+            def interval(params, xs_i):
+                batch_i = batch_of(xs_i)
+                stale = stale_of(params, xs_i)
 
                 def sgd_step(params, _):
                     params, losses = step(params, stale, batch_i, eta)
@@ -509,7 +537,7 @@ class LLMRoundRunner:
 
                 return jax.lax.scan(sgd_step, params, None, length=Q)
 
-            params, losses = jax.lax.scan(interval, params, batches, length=lam)
+            params, losses = jax.lax.scan(interval, params, xs, length=lam)
             return params, losses.reshape(-1)
 
         stepf = jax.vmap(make_hsgd_step_stats(model, self.n_shards),
@@ -518,8 +546,9 @@ class LLMRoundRunner:
         # model copy — the per-pod gbar mean)
         zeros_g = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], jnp.float32), params)
 
-        def interval(params, batch_i):
-            stale = exch(params, batch_i)
+        def interval(params, xs_i):
+            batch_i = batch_of(xs_i)
+            stale = stale_of(params, xs_i)
 
             def sgd_step(carry, _):
                 params, prev_g, prev_ok = carry
@@ -546,12 +575,13 @@ class LLMRoundRunner:
                 None, length=Q)
             return params, stats
 
-        params, stats = jax.lax.scan(interval, params, batches, length=lam)
+        params, stats = jax.lax.scan(interval, params, xs, length=lam)
         stats = jax.tree.map(lambda x: x.reshape(-1), stats)  # [Λ, Q] -> [P]
         return params, stats
 
     def round_fn(self, P: int, Q: int, compression_k: float = 0.0,
-                 quant_levels: int = 0, collect_stats: bool = True):
+                 quant_levels: int = 0, collect_stats: bool = True,
+                 dp: bool = False):
         """Compiled single-round executor for a (P, Q, k, b) bucket.
 
         fn(params, batches, eta, pod_weights=None) -> (params, stats|losses).
@@ -560,13 +590,34 @@ class LLMRoundRunner:
         given) are traced. Cached per bucket — a run whose cadence varies
         round-to-round pays one compile per distinct bucket, not one per
         round.
+
+        ``dp`` adds exactly one enable bit to the cache key; the executor then
+        takes traced (dp_clip, dp_sigma, dp_key) after ``eta`` — re-picking σ
+        or re-keying the round noise never recompiles (traced-η discipline).
         """
         if P < 1 or Q < 1 or P % Q:
             raise ValueError(f"P={P} must be a positive multiple of Q={Q}")
         key = (P, Q, compression_k, quant_levels, collect_stats)
+        if dp:
+            key = key + (True,)
         fn = self._round_cache.get(key)
         if fn is None:
             lam = P // Q
+
+            if dp:
+                # name keeps the llm_round prefix so compile_guard budgets
+                # tracking r"llm_round" attribute this executor too
+                @functools.partial(jax.jit, donate_argnums=(0,))
+                def llm_round_dp(params, batches, eta, dp_clip, dp_sigma,
+                                 dp_key, pod_weights=None):
+                    return self._round_impl(params, batches, eta, Q, lam,
+                                            compression_k, quant_levels,
+                                            collect_stats, pod_weights,
+                                            dp_clip=dp_clip, dp_sigma=dp_sigma,
+                                            dp_key=dp_key)
+
+                fn = self._round_cache[key] = llm_round_dp
+                return fn
 
             # named so compile_guard can attribute compiles per executor
             @functools.partial(jax.jit, donate_argnums=(0,))

@@ -31,7 +31,13 @@ from repro.checkpoint import save_checkpoint
 from repro.common.config import FederationConfig, TrainConfig, get_config
 from repro.core import metrics as MET
 from repro.core.baselines import make_runner, merge_groups_for_tdcd
-from repro.core.controller import AdaptiveConfig, AdaptiveHSGDRunner, ladder_from
+from repro.core.controller import (
+    AdaptiveConfig,
+    AdaptiveHSGDRunner,
+    epsilon_of,
+    gaussian_rho,
+    ladder_from,
+)
 from repro.core.hsgd import global_model, init_state, make_group_weights
 from repro.data.partition import hybrid_partition
 from repro.data.synthetic import DATASETS, flatten_for_tower, make_dataset, vertical_split
@@ -74,10 +80,21 @@ def run_ehealth(args) -> dict:
     data = {k: jnp.asarray(v) for k, v in raw.items()}
     w = make_group_weights(data)
 
+    dp = args.dp_clip > 0.0 and args.dp_sigma > 0.0
+    private = dp or args.dp_clip > 0.0 or args.secure_agg
+    if private and algo not in ("hsgd", "c-hsgd"):
+        raise SystemExit(
+            f"--dp-clip/--dp-sigma/--secure-agg drive the HSGD exchange; "
+            f"got --algorithm {algo}")
+
     if args.population:
         if algo != "hsgd":
             raise SystemExit(
                 f"--population drives the HSGD cohort loop; got --algorithm {algo}")
+        if private:
+            raise SystemExit(
+                "--population does not combine with the privacy flags yet; "
+                "use the fixed-interval or --adaptive e-health path")
         return _run_population_cli(args, model, fed, train, data)
 
     runner, eff_fed = make_runner(algo, model, fed, train)
@@ -102,14 +119,28 @@ def run_ehealth(args) -> dict:
             # explicit --compression-k/--quantization (or c-hsgd defaults)
             # become the governor's rung 0 — never silently loosened
             ladder=ladder_from(eff_train.compression_k, eff_train.quantization_bits),
+            privacy_budget=args.epsilon,
+            privacy_delta=args.delta,
+            dp_clip=args.dp_clip,
+            dp_sigma=args.dp_sigma,
+            secure_agg=args.secure_agg,
         )
         controller = AdaptiveHSGDRunner(model, fed, eff_train, acfg)
         state, losses, history = controller.run(
             state, data, w, probe_key=jax.random.PRNGKey(args.seed + 1))
+        runner = controller.runner  # executor-cache accounting reads this
         for h in history:
+            eps = (f" σ={h['dp_sigma']:.3g} ε={h['epsilon_total']:.3g}"
+                   if h.get("dp_sigma") else "")
             print(f"[adaptive] round {h['round']:3d}: P=Q={h['P']:3d} "
                   f"eta={h['eta']:.4g} rung={h['rung']} Γ={h['gamma']:.3g} "
-                  f"bytes={h['bytes_total'] / 1e6:.2f}MB loss={h['loss_last']:.4f}")
+                  f"bytes={h['bytes_total'] / 1e6:.2f}MB "
+                  f"loss={h['loss_last']:.4f}{eps}")
+    elif private:
+        state, losses = runner.run_private(
+            state, data, w, rounds=args.rounds, seed=args.seed,
+            dp_clip=args.dp_clip, dp_sigma=args.dp_sigma,
+            secure_agg=args.secure_agg)
     else:
         state, losses = runner.run(state, data, w, rounds=args.rounds)
     dt = time.time() - t0
@@ -119,13 +150,26 @@ def run_ehealth(args) -> dict:
     m = MET.evaluate_global(
         model, gm, flatten_for_tower(spec, X1), flatten_for_tower(spec, X2), y
     )
-    m["train_loss_final"] = float(losses[-1])
+    m["train_loss_final"] = float(losses[-1]) if len(losses) else float("nan")
     m["steps"] = int(len(losses))
     m["wall_s"] = round(dt, 2)
     if history is not None:
         m["adaptive_rounds"] = len(history)
         m["adaptive_bytes_total"] = history[-1]["bytes_total"]
         m["adaptive_final_PQ"] = history[-1]["P"]
+        if dp and history:
+            m["epsilon"] = history[-1]["epsilon_total"]
+            m["delta"] = args.delta
+    elif dp:
+        # fixed-interval ledger: one Gaussian release per exchange, Λ = P/Q
+        # exchanges per round (zCDP composition, same math as the controller)
+        releases = args.rounds * eff_fed.lam
+        m["epsilon"] = epsilon_of(releases * gaussian_rho(args.dp_sigma),
+                                  args.delta)
+        m["delta"] = args.delta
+    if private:
+        m["secure_agg"] = bool(args.secure_agg)
+        m["executors_compiled"] = len(runner._round_cache)
     print(json.dumps(m, indent=1))
     if args.checkpoint:
         save_checkpoint(args.checkpoint, gm, step=len(losses), extra={"metrics": m})
@@ -346,6 +390,18 @@ def _validate_args(ap, args):
     if (args.resume or args.ckpt_every > 0) and not args.checkpoint:
         ap.error("--resume/--ckpt-every need --checkpoint <dir> to hold the "
                  "checkpoints")
+    if args.dp_clip < 0.0:
+        ap.error(f"--dp-clip must be >= 0, got {args.dp_clip}")
+    if args.dp_sigma < 0.0:
+        ap.error(f"--dp-sigma must be >= 0, got {args.dp_sigma}")
+    if args.dp_sigma > 0.0 and args.dp_clip <= 0.0:
+        ap.error("--dp-sigma > 0 needs --dp-clip > 0 (noise std is σ·C)")
+    if not 0.0 < args.delta < 1.0:
+        ap.error(f"--delta must be in (0, 1), got {args.delta}")
+    if args.epsilon <= 0.0:
+        ap.error(f"--epsilon must be > 0, got {args.epsilon}")
+    if (args.dp_clip > 0.0 or args.secure_agg) and args.arch:
+        ap.error("the privacy flags drive the e-health HSGD path, not --arch")
 
 
 def main(argv=None):
@@ -449,6 +505,21 @@ def main(argv=None):
                          "rounds (0 = only a final checkpoint)")
     ap.add_argument("--resume", action="store_true",
                     help="resume a --population run from the --checkpoint dir")
+    # -- privacy-hardened exchange (e-health hsgd/c-hsgd path) ---------------
+    ap.add_argument("--dp-clip", type=float, default=0.0,
+                    help="per-row L2 clip C of the fused DP stage (0 = off)")
+    ap.add_argument("--dp-sigma", type=float, default=0.0,
+                    help="Gaussian noise multiplier σ (noise std = σ·C); "
+                         "requires --dp-clip > 0")
+    ap.add_argument("--epsilon", type=float, default=float("inf"),
+                    help="(ε, δ) privacy budget; with --adaptive the "
+                         "controller raises σ / amortizes P and refuses "
+                         "rounds that would bust it")
+    ap.add_argument("--delta", type=float, default=1e-5,
+                    help="δ of the (ε, δ) guarantee")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-mask the eq. (1) uplink (fixed-point ring; "
+                         "single uplinks are uninformative, sums are exact)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

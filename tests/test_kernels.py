@@ -99,6 +99,114 @@ def test_compress_pytree_matches_per_leaf():
     assert compress_pytree(tree, 1.0, 0) is tree
 
 
+@pytest.mark.parametrize("rows,n,k", [(8, 256, 16), (5, 300, 7), (1, 128, 1)])
+def test_quantized_rows_stay_sparse(rows, n, k):
+    """Zero-anchor regression: sparsify-then-quantize must keep the zeros.
+
+    Mixed-sign rows make the survivor min negative; the old all-valid-extrema
+    grid then snapped every zeroed entry to round((0-qlo)/scale)*scale+qlo
+    != 0, silently re-densifying the message the byte model bills as k
+    values. Survivor-range quantization + re-masking keeps nnz <= k + ties."""
+    x = jax.random.normal(jax.random.PRNGKey(rows + n + k), (rows, n))
+    # force at least one large negative survivor per row
+    x = x.at[:, 0].set(-10.0 - jnp.arange(rows, dtype=jnp.float32))
+    for out in (fused_compress_pallas(x, k, levels=128),
+                _oracle(x, k, levels=128)):
+        nnz = (np.asarray(out) != 0).sum(axis=-1)
+        assert nnz.max() <= k + 8, f"quantization re-densified: nnz={nnz}"
+        assert nnz.min() >= 1
+        # the forced negative survivor is still there, and still negative
+        assert (np.asarray(out)[:, 0] < 0).all()
+
+
+def test_legacy_quantize_zero_anchored():
+    """Standalone quantize(): 0 -> exactly 0, error bound step/2 kept."""
+    from repro.core.compression import quantize
+
+    x = jnp.asarray([[-4.0, 0.0, 0.0, 1.0, 3.0], [0.5, 0.0, -0.5, 2.0, 0.0]])
+    q = np.asarray(quantize(x, 128))
+    np.testing.assert_array_equal(q[np.asarray(x) == 0.0], 0.0)
+    step = (np.asarray(x).max(-1) - np.asarray(x).min(-1)) / 127
+    assert np.abs(q - np.asarray(x)).max() <= (step.max() / 2) + 1e-7
+
+
+@pytest.mark.parametrize("rows,n", [(4, 64), (16, 300), (3, 1000)])
+@pytest.mark.parametrize("levels", [0, 128])
+def test_fused_compress_dp_matches_oracle(rows, n, levels):
+    """DP stage (clip + precomputed noise operands) kernel vs jitted ref."""
+    kx, kn = jax.random.split(jax.random.PRNGKey(rows * n + levels))
+    x = jax.random.normal(kx, (rows, n))
+    noise = jax.random.normal(kn, (rows, n))
+    k = max(1, n // 10)
+    clip = jnp.asarray(0.5, jnp.float32)
+    sigma = jnp.asarray(1.3, jnp.float32)
+    out = fused_compress_pallas(x, k, levels=levels, dp_clip=clip,
+                                dp_sigma=sigma, dp_noise=noise)
+    oracle = _oracle(x, k, levels=levels, dp_clip=clip, dp_sigma=sigma,
+                     dp_noise=noise)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+
+
+def test_fused_compress_dp_ragged_matches_oracle():
+    """DP + ragged rows: per-row norms/noise respect the valid length."""
+    widths = [64, 300, 129]
+    rows = 4
+    blocks = [jax.random.normal(jax.random.PRNGKey(i), (rows, w))
+              for i, w in enumerate(widths)]
+    noises = [jax.random.normal(jax.random.PRNGKey(10 + i), (rows, w))
+              for i, w in enumerate(widths)]
+    n_max = max(widths)
+    pad = lambda bs: jnp.concatenate(
+        [jnp.pad(b, ((0, 0), (0, n_max - w))) for b, w in zip(bs, widths)], axis=0)
+    padded, noise = pad(blocks), pad(noises)
+    k = jnp.concatenate([jnp.full((rows,), max(1, w // 10), jnp.int32) for w in widths])
+    row_len = jnp.concatenate([jnp.full((rows,), w, jnp.int32) for w in widths])
+    clip = jnp.asarray(1.0, jnp.float32)
+    sigma = jnp.asarray(0.7, jnp.float32)
+    out = fused_compress_pallas(padded, k, levels=128, row_len=row_len,
+                                dp_clip=clip, dp_sigma=sigma, dp_noise=noise)
+    for i, (b, nz, w) in enumerate(zip(blocks, noises, widths)):
+        want = _oracle(b, max(1, w // 10), levels=128, dp_clip=clip,
+                       dp_sigma=sigma, dp_noise=nz)
+        got = out[i * rows:(i + 1) * rows, :w]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert not np.asarray(out[i * rows:(i + 1) * rows, w:]).any()
+
+
+def test_dp_sigma0_large_clip_bit_identical():
+    """σ=0 with a clip above every row norm is the exact non-DP pass: the
+    stage multiplies by exactly 1.0 and adds exactly 0.0. (A FINITE clip —
+    0*inf would poison the noise term with NaN.)"""
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (8, 320))) + 0.01
+    noise = jax.random.normal(jax.random.PRNGKey(10), (8, 320))
+    plain = fused_compress_pallas(x, 32, levels=128)
+    dp0 = fused_compress_pallas(x, 32, levels=128,
+                                dp_clip=jnp.asarray(1e9, jnp.float32),
+                                dp_sigma=jnp.asarray(0.0, jnp.float32),
+                                dp_noise=noise)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(dp0))
+
+
+def test_compress_pytree_dp_matches_per_leaf():
+    """compress_pytree with dp_key draws ONE noise matrix for the stacked
+    rows; each leaf must match the ref called with that leaf's noise slice."""
+    tree = {
+        "b": jax.random.normal(jax.random.PRNGKey(6), (3, 17)),
+        "w": jax.random.normal(jax.random.PRNGKey(5), (3, 4, 96)),
+    }
+    clip = jnp.asarray(1.0, jnp.float32)
+    sigma = jnp.asarray(0.5, jnp.float32)
+    dp_key = jax.random.PRNGKey(42)
+    out = jax.jit(lambda t: compress_pytree(t, 0.25, 128, dp_clip=clip,
+                                            dp_sigma=sigma, dp_key=dp_key))(tree)
+    for name, leaf in tree.items():
+        assert out[name].shape == leaf.shape
+        assert not np.array_equal(np.asarray(out[name]), np.asarray(leaf))
+        nnz = (np.asarray(out[name]).reshape(-1, leaf.shape[-1]) != 0).sum(-1)
+        kmax = max(1, round(0.25 * leaf.shape[-1]))
+        assert nnz.max() <= kmax + 8  # sparsity survives DP + quantization
+
+
 # ---------------------------------------------------------------------------
 # topk_sparsify
 # ---------------------------------------------------------------------------

@@ -99,6 +99,22 @@ def test_exchange_compresses_whole_message_matching_byte_model(tiny_model):
             for l in jax.tree_util.tree_leaves(msg[name]))  # 4B value + 4B idx
         assert actual == pytest.approx(billed, rel=rel), name
 
+    # REGRESSION (zero-anchor bug): on a QUANTIZED rung the sparsified zeros
+    # must stay zero after quantization — the old anchor-shifted grid snapped
+    # every pruned entry to a nonzero level, so the realized wire size
+    # silently blew past the eq. (19) bill by ~1/k_frac.
+    qmsg = make_exchange_step(tiny_model, k_frac, 128)(params, batch)
+    for name in ("theta0", "z1", "z2"):
+        for got, sparse in zip(jax.tree_util.tree_leaves(qmsg[name]),
+                               jax.tree_util.tree_leaves(msg[name])):
+            n = got.shape[-1]
+            nnz_q = (np.asarray(got).reshape(-1, n) != 0).sum(axis=-1)
+            nnz_s = (np.asarray(sparse).reshape(-1, n) != 0).sum(axis=-1)
+            # per row: never above the sparsify-only count (tie rows stay
+            # dense on BOTH paths, so the comparison absorbs them)
+            assert (nnz_q <= nnz_s).all(), name
+            assert nnz_q.min() >= 1, name  # top survivor never quantized away
+
 
 def test_exchange_uncompressed_passthrough(tiny_model):
     cfg = tiny_cfg()

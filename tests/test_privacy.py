@@ -1,0 +1,277 @@
+"""Privacy-hardened exchange: secure-aggregation ring, fused-DP runs, and
+the controller's (ε, δ) ledger."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import FederationConfig, TrainConfig
+from repro.core import federation as F
+from repro.core.comm_model import MessageSizes
+from repro.core.controller import (
+    AdaptiveConfig,
+    ControllerCore,
+    RoundPlan,
+    epsilon_of,
+    gaussian_rho,
+)
+from repro.core.hsgd import HSGDRunner, exchange, init_state, make_group_weights
+from repro.data.partition import hybrid_partition
+from repro.data.synthetic import ORGANAMNIST, make_dataset
+from repro.models.split_model import cnn_hybrid
+
+
+def _mini(M=2, K=8, A_frac=0.5, q=2, p=4):
+    fed = FederationConfig(num_groups=M, devices_per_group=K, alpha=A_frac,
+                           local_interval=q, global_interval=p)
+    X, y = make_dataset(ORGANAMNIST, M * K, seed=0)
+    fd = hybrid_partition(ORGANAMNIST, X, y, fed, seed=0)
+    data = {k: jnp.asarray(v) for k, v in fd.stacked().items()}
+    model = cnn_hybrid(h_rows=11)
+    return model, fed, data
+
+
+# ---------------------------------------------------------------------------
+# Secure-aggregation ring (pairwise antisymmetric masks, ℤ_{2^32})
+# ---------------------------------------------------------------------------
+
+
+def test_masked_aggregate_bitwise_equals_unmasked():
+    """The server-side sum over the full cohort cancels every pairwise mask
+    EXACTLY — masked and zero-masked pipelines agree to the bit, and both
+    land within fixed-point resolution of the float eq. (1) mean."""
+    rng = np.random.RandomState(0)
+    theta2 = {"w": jnp.asarray(rng.randn(3, 6, 5).astype(np.float32)),
+              "b": jnp.asarray(rng.randn(3, 6).astype(np.float32))}
+    masks = F.secure_agg_masks(theta2, seed=7, round_idx=2)
+    zeros = jax.tree.map(jnp.zeros_like, masks)
+    got = F.secure_local_aggregate(F.secure_mask_uplink(theta2, masks), theta2)
+    want = F.secure_local_aggregate(F.secure_mask_uplink(theta2, zeros), theta2)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    plain = F.local_aggregate(theta2)
+    for g, p_ in zip(jax.tree.leaves(got), jax.tree.leaves(plain)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(p_),
+                                   atol=2.0 ** -15)
+
+
+def test_single_masked_uplink_hides_the_payload():
+    """Each device's wire payload carries a nonzero ring mask (for A >= 2):
+    what leaves the device is NOT its fixed-point θ2 encoding."""
+    rng = np.random.RandomState(1)
+    theta2 = {"w": jnp.asarray(rng.randn(2, 4, 8).astype(np.float32))}
+    masks = F.secure_agg_masks(theta2, seed=3, round_idx=0)
+    masked = F.secure_mask_uplink(theta2, masks)
+    bare = F.secure_mask_uplink(theta2, jax.tree.map(jnp.zeros_like, masks))
+    diff = np.asarray(masked["w"]) != np.asarray(bare["w"])
+    # every device slot is masked somewhere in its payload
+    assert diff.any(axis=-1).all()
+
+
+def test_masks_rekey_per_round_and_per_seed():
+    rng = np.random.RandomState(2)
+    theta2 = {"w": jnp.asarray(rng.randn(2, 4, 8).astype(np.float32))}
+    m0 = np.asarray(F.secure_agg_masks(theta2, seed=5, round_idx=0)["w"])
+    m1 = np.asarray(F.secure_agg_masks(theta2, seed=5, round_idx=1)["w"])
+    m0b = np.asarray(F.secure_agg_masks(theta2, seed=5, round_idx=0)["w"])
+    m0s = np.asarray(F.secure_agg_masks(theta2, seed=6, round_idx=0)["w"])
+    np.testing.assert_array_equal(m0, m0b)  # deterministic in (seed, round)
+    assert (m0 != m1).any() and (m0 != m0s).any()
+
+
+def test_dropout_rekeying_cancels_over_survivors():
+    """With a dropout pattern, masks are drawn only between ALIVE pairs, so
+    the survivor-restricted aggregate still cancels to the bit."""
+    rng = np.random.RandomState(3)
+    M, A = 2, 6
+    theta2 = {"w": jnp.asarray(rng.randn(M, A, 4).astype(np.float32))}
+    alive = np.ones((M, A), bool)
+    alive[0, 1] = alive[0, 4] = alive[1, 0] = False
+    pmask = jnp.asarray(alive.astype(np.float32))
+    masks = F.secure_agg_masks(theta2, seed=9, round_idx=0, alive=alive)
+    zeros = jax.tree.map(jnp.zeros_like, masks)
+    got = F.secure_local_aggregate(
+        F.secure_mask_uplink(theta2, masks), theta2, pmask)
+    want = F.secure_local_aggregate(
+        F.secure_mask_uplink(theta2, zeros), theta2, pmask)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(want["w"]))
+    # dead slots carry no mask at all: nothing survives to bias a retransmit
+    assert (np.asarray(masks["w"])[~alive] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Private runs: run_private / exchange legs
+# ---------------------------------------------------------------------------
+
+
+def _runner(model, fed, k=0.25, b=128, lr=0.05):
+    return HSGDRunner(model, fed, TrainConfig(
+        learning_rate=lr, compression_k=k, quantization_bits=b))
+
+
+def test_run_private_plain_mode_bitwise_matches_run():
+    """With every privacy leg off, the host-loop runner is BIT-IDENTICAL to
+    the scan-based ``run`` — the private path costs nothing when unused."""
+    model, fed, data = _mini()
+    w = make_group_weights(data)
+    st_a, la = _runner(model, fed).run(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w, rounds=3)
+    st_b, lb = _runner(model, fed).run_private(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w, rounds=3)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for a, b_ in zip(jax.tree.leaves(st_a.theta0), jax.tree.leaves(st_b.theta0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_run_private_secure_agg_close_to_plain():
+    """Masking alone perturbs the weights only by fixed-point roundoff
+    (2^-15 per aggregate); within the first round that stays below 1e-2 of
+    loss. (Later rounds drift apart — SGD amplifies any perturbation — so
+    the bound is only asserted where it is a roundoff claim, not a
+    stability claim.)"""
+    model, fed, data = _mini()
+    w = make_group_weights(data)
+    _, la = _runner(model, fed).run_private(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w,
+        rounds=2)
+    runner = _runner(model, fed)
+    _, lb = runner.run_private(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w,
+        rounds=2, secure_agg=True)
+    la, lb = np.asarray(la), np.asarray(lb)
+    P = fed.local_interval * fed.lam
+    np.testing.assert_allclose(la[:P], lb[:P], atol=1e-2)
+    assert np.isfinite(lb).all()
+    assert len(runner._round_cache) == 1  # one executor for the whole run
+
+
+def test_run_private_dp_perturbs_and_compiles_one_executor():
+    model, fed, data = _mini()
+    w = make_group_weights(data)
+    _, la = _runner(model, fed).run_private(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w,
+        rounds=2)
+    runner = _runner(model, fed)
+    _, lb = runner.run_private(
+        init_state(jax.random.PRNGKey(0), model, fed, data), data, w,
+        rounds=2, dp_clip=1.0, dp_sigma=1.0, secure_agg=True)
+    lb = np.asarray(lb)
+    assert np.isfinite(lb).all()
+    assert (np.asarray(la) != lb).any()  # the noise reaches the trajectory
+    assert len(runner._round_cache) == 1  # clip/σ/masks are traced operands
+
+
+def test_run_private_sigma_requires_clip():
+    model, fed, data = _mini()
+    w = make_group_weights(data)
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    with pytest.raises(ValueError, match="dp_clip"):
+        _runner(model, fed).run_private(state, data, w, rounds=1,
+                                        dp_sigma=1.0)
+
+
+def test_exchange_legacy_sort_path_rejects_dp():
+    """DP is fused into the batched kernel; the pre-fusion leaf-wise path
+    must refuse rather than silently skip the clip+noise stage."""
+    model, fed, data = _mini()
+    state = init_state(jax.random.PRNGKey(0), model, fed, data)
+    with pytest.raises(ValueError, match="fused"):
+        exchange(model, state, data, fed, compression_k=0.25,
+                 quant_levels=128, fused=False,
+                 dp_clip=jnp.float32(1.0), dp_sigma=jnp.float32(1.0))
+
+
+# ---------------------------------------------------------------------------
+# (ε, δ) ledger: accounting, the σ ratchet, and plan refusal
+# ---------------------------------------------------------------------------
+
+_SIZES = lambda k, b: MessageSizes(1e5, 1e4, 1e4, 1e3, 1e3, 4)
+
+
+def _fake_stats(P):
+    return {"loss": np.full(P, 0.5, np.float32),
+            "gnorm2": np.full(P, 1.0, np.float32),
+            "delta2": np.full(P, 0.25, np.float32),
+            "rho": np.full(P, 1.0, np.float32),
+            "rho_ok": np.ones(P, np.float32)}
+
+
+def _dp_core(total=32, budget=np.inf, sigma=1.0, **kw):
+    cfg = AdaptiveConfig(total_steps=total, privacy_budget=budget,
+                         dp_clip=1.0, dp_sigma=sigma, **kw)
+    fed = FederationConfig(local_interval=1, global_interval=2)
+    return ControllerCore(cfg, fed, _SIZES, eta0=0.05)
+
+
+def test_ledger_charges_zcdp_per_round_and_epsilon_is_monotone():
+    core = _dp_core(total=32, sigma=2.0)
+    eps_seen, rho_expect = [], 0.0
+    while not core.done:
+        plan, _ = core.plan()
+        assert plan.dp_sigma >= core.cfg.dp_sigma  # ladder only amplifies
+        core.record(plan, _fake_stats(plan.P))
+        rho_expect += (plan.P // plan.Q) * gaussian_rho(plan.dp_sigma)
+        eps_seen.append(core.history[-1]["epsilon_total"])
+    np.testing.assert_allclose(core.rho_spent, rho_expect, rtol=1e-12)
+    np.testing.assert_allclose(
+        eps_seen[-1], epsilon_of(rho_expect, core.cfg.privacy_delta))
+    assert all(b >= a for a, b in zip(eps_seen, eps_seen[1:]))
+    # the executed rounds honored their own projection
+    assert all(h["epsilon_total"] <= h["projected_epsilon"] * (1 + 1e-9)
+               for h in core.history)
+
+
+def test_tight_budget_refuses_before_any_round_executes():
+    core = _dp_core(total=64, budget=1e-3)
+    plan, _ = core.plan()
+    assert plan.dp_exhausted and core.privacy_exhausted and core.done
+    assert core.rho_spent == 0.0 and core.history == []  # nothing ran
+
+
+def test_moderate_budget_ratchets_sigma_up_instead_of_refusing():
+    """When the base σ busts ε but a ladder rung fits, the governor climbs
+    the rung — trading utility for the guarantee — rather than refusing."""
+    loose = _dp_core(total=32, sigma=1.0)
+    p0, _ = loose.plan()
+    eps_base = p0.projected_epsilon
+    core = _dp_core(total=32, sigma=1.0, budget=eps_base * 0.3)
+    plan, _ = core.plan()
+    assert not plan.dp_exhausted
+    assert plan.dp_rung > 0 and plan.dp_sigma > core.cfg.dp_sigma
+    assert plan.projected_epsilon <= core.cfg.privacy_budget
+    # the rung is a ratchet: later plans never drop below it
+    core.record(plan, _fake_stats(plan.P))
+    if not core.done:
+        plan2, _ = core.plan()
+        assert plan2.dp_rung >= plan.dp_rung
+
+
+def test_ledger_state_dict_roundtrip_and_legacy_checkpoints():
+    core = _dp_core(total=32, sigma=2.0)
+    plan, _ = core.plan()
+    core.record(plan, _fake_stats(plan.P))
+    sd = core.state_dict()
+    clone = _dp_core(total=32, sigma=2.0)
+    clone.load_state_dict(sd)
+    assert clone.rho_spent == core.rho_spent
+    assert clone.dp_rung == core.dp_rung
+    assert clone.privacy_exhausted == core.privacy_exhausted
+    assert clone.epsilon_spent == core.epsilon_spent
+    # a pre-privacy checkpoint (no ledger keys) resumes with ε = 0 spent
+    legacy = {k: v for k, v in sd.items()
+              if k not in ("rho_spent", "dp_rung", "privacy_exhausted")}
+    clone.load_state_dict(legacy)
+    assert clone.rho_spent == 0.0 and clone.dp_rung == 0
+    assert not clone.privacy_exhausted
+
+
+def test_dp_off_plans_carry_no_privacy_fields():
+    cfg = AdaptiveConfig(total_steps=8)
+    fed = FederationConfig(local_interval=1, global_interval=2)
+    core = ControllerCore(cfg, fed, _SIZES, eta0=0.05)
+    plan, _ = core.plan()
+    assert isinstance(plan, RoundPlan)
+    assert plan.dp_sigma == 0.0 and plan.projected_epsilon == 0.0
+    assert not plan.dp_exhausted
+    core.record(plan, _fake_stats(plan.P))
+    assert core.rho_spent == 0.0 and core.epsilon_spent == 0.0

@@ -497,3 +497,90 @@ def test_fault_injector_deterministic_and_drop_excludes_grad_fault(
     # poison the aggregate with a faulty gradient
     assert not np.any((fa.drop > 0)
                       & (np.nan_to_num(fa.grad_fault, nan=1.0) != 0))
+
+
+# ---------------------------------------------------------------------------
+# Privacy: fused DP stage, secure-aggregation ring, (ε, δ) ledger
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 8), st.integers(4, 100), st.floats(0.01, 10.0),
+       st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_dp_clip_bounds_row_l2(rows, n, clip, seed):
+    """With σ=0 and k=n, the fused DP stage is exactly per-row L2 clipping:
+    every output row norm is ≤ min(‖x‖₂, clip) up to roundoff."""
+    from repro.core.compression import compress_rows_ref
+
+    rng = np.random.RandomState(seed % 2**31)
+    x = jnp.asarray(rng.randn(rows, n).astype(np.float32)) * 3.0
+    noise = jnp.zeros_like(x)  # σ=0: the noise operand is inert
+    out = np.asarray(compress_rows_ref(
+        x, n, levels=0, dp_clip=jnp.float32(clip),
+        dp_sigma=jnp.float32(0.0), dp_noise=noise))
+    norms = np.linalg.norm(out, axis=-1)
+    orig = np.linalg.norm(np.asarray(x), axis=-1)
+    assert (norms <= np.minimum(orig, clip) * (1 + 1e-5) + 1e-6).all()
+
+
+@given(st.integers(1, 6), st.integers(4, 80), st.integers(2, 10),
+       st.sampled_from([0, 128]), st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_dp_sigma0_large_clip_is_identity(rows, n, k_div, levels, seed):
+    """σ=0 with a finite clip above every row norm is BIT-IDENTICAL to the
+    non-DP pass (×1.0 and +0.0 change no bits on finite inputs)."""
+    from repro.core.compression import compress_rows_ref
+
+    _jref = jax.jit(compress_rows_ref, static_argnames=("levels",))
+    rng = np.random.RandomState(seed % 2**31)
+    x = jnp.asarray(np.abs(rng.randn(rows, n)).astype(np.float32))  # no -0.0
+    noise = jnp.asarray(rng.randn(rows, n).astype(np.float32))
+    k = max(1, n // k_div)
+    plain = _jref(x, k, levels=levels)
+    dp0 = _jref(x, k, levels=levels, dp_clip=jnp.float32(1e9),
+                dp_sigma=jnp.float32(0.0), dp_noise=noise)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(dp0))
+
+
+@given(st.integers(1, 3), st.integers(2, 6), st.integers(2, 5),
+       st.integers(0, 10**6), st.integers(0, 50))
+@settings(**SETTINGS)
+def test_secure_agg_masks_cancel_for_any_cohort(M, A, dim, seed, round_idx):
+    """Pairwise ring masks cancel TO THE BIT in the aggregate, for every
+    cohort size, dropout pattern, and round — wrapping int32 sums are exact,
+    so masked and zero-masked pipelines agree bitwise."""
+    rng = np.random.RandomState(seed % 2**31)
+    theta2 = {"w": jnp.asarray(rng.randn(M, A, dim).astype(np.float32))}
+    alive = (rng.rand(M, A) < 0.7)
+    alive[:, 0] = True  # at least one survivor per group
+    pmask = jnp.asarray(alive.astype(np.float32))
+    masks = F.secure_agg_masks(theta2, seed % 2**31, round_idx,
+                               alive=np.asarray(alive))
+    zeros = jax.tree.map(jnp.zeros_like, masks)
+    got = F.secure_local_aggregate(
+        F.secure_mask_uplink(theta2, masks), theta2, pmask)
+    want = F.secure_local_aggregate(
+        F.secure_mask_uplink(theta2, zeros), theta2, pmask)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(want["w"]))
+    # and the ring pipeline lands within fixed-point resolution of the float
+    # masked mean
+    plain = F.local_aggregate(theta2, pmask)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(plain["w"]),
+                               atol=2.0 ** -15)
+
+
+@given(st.integers(1, 200), st.floats(0.3, 8.0), st.floats(1.1, 4.0),
+       st.sampled_from([1e-5, 1e-6, 1e-8]))
+@settings(**SETTINGS)
+def test_epsilon_monotone_in_rounds_decreasing_in_sigma(rounds, sigma,
+                                                        factor, delta):
+    """ε grows with composed rounds and shrinks with a larger σ — the two
+    monotonicities the privacy governor's ratchet relies on."""
+    from repro.core.controller import epsilon_of, gaussian_rho
+
+    e = epsilon_of(rounds * gaussian_rho(sigma), delta)
+    e_more_rounds = epsilon_of((rounds + 1) * gaussian_rho(sigma), delta)
+    e_more_noise = epsilon_of(rounds * gaussian_rho(sigma * factor), delta)
+    assert e > 0
+    assert e_more_rounds >= e * (1 - 1e-12)
+    assert e_more_noise <= e * (1 + 1e-12)

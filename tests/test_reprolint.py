@@ -259,6 +259,41 @@ FIXTURES = {
                     f.write("\\n".join(lines))
         """,
     },
+    "RP10": {
+        "bad": """
+            import numpy as np
+            def draw_faults(seed, r):
+                rng = np.random.default_rng([seed, 7, r])
+                return rng.integers(0, 10)
+        """,
+        # a variable stream index defeats the registry audit entirely
+        "bad2": """
+            import numpy as np
+            def draw(seed, widx):
+                rng = np.random.default_rng([seed, widx])
+                return rng.integers(0, 10)
+        """,
+        "good": """
+            import numpy as np
+            def draw_faults(seed, r):
+                rng = np.random.default_rng([seed, 3, r])
+                return rng.integers(0, 10)
+        """,
+        # a *_STREAM module constant documents its registry entry
+        "good2": """
+            import numpy as np
+            SECURE_AGG_STREAM = 4
+            def masks(seed, r):
+                rng = np.random.default_rng([seed, SECURE_AGG_STREAM, r])
+                return rng.integers(0, 2**31)
+        """,
+        # plain scalar seeds carry no stream index to audit
+        "good3": """
+            import numpy as np
+            def make_rng(seed):
+                return np.random.default_rng(seed)
+        """,
+    },
 }
 
 _CASES = [(rid, kind) for rid, fx in FIXTURES.items() for kind in fx]
@@ -279,7 +314,7 @@ def test_fixture_matrix(rule_id, kind):
 
 def test_every_rule_has_fixtures_and_registry_entry():
     assert set(FIXTURES) == set(RULES)
-    assert len(RULES) == 9
+    assert len(RULES) == 10
     for rid, r in RULES.items():
         assert r.id == rid and r.title and r.doc
 
